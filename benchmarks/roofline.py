@@ -1,0 +1,134 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch × shape) cell compiled on the single-pod 16×16 mesh:
+
+  compute term    = HLO_FLOPs_per_device / 197e12        (bf16 MXU peak)
+  memory term     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+  collective term = collective_bytes_per_device / 50e9   (ICI per link)
+
+FLOPs/bytes/collective bytes come from benchmarks/hlo_cost.py (trip-count-
+aware; XLA's cost_analysis undercounts every scanned loop). The dominant
+term ≈ the step-time lower bound; MODEL_FLOPS/HLO_FLOPs shows how much of
+the compiled compute is "useful" (remat, padding, dispatch waste).
+
+CPU-backend caveats (documented per-cell where they bite):
+  * bf16 dots are float-normalized to f32 on CPU — flops unaffected, but
+    memory bytes of dot operands read ~2× larger than TPU-true. We report
+    a bf16-corrected memory term alongside the raw one.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.hlo_cost import analyze_file  # noqa: E402
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / ICI link
+CHIPS = 256  # single pod
+
+SHAPE_TOKENS = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+                "decode_32k": (1, 128), "long_500k": (1, 1)}
+
+# active params (B) per arch — 6·N·D numerator (decode/prefill use 2·N·D)
+ACTIVE_PARAMS = {
+    "qwen1.5-32b": 32.5e9, "gemma-2b": 2.5e9, "mistral-large-123b": 122.6e9,
+    "minitron-8b": 8.3e9, "granite-moe-3b-a800m": 1.0e9,
+    "qwen3-moe-30b-a3b": 3.3e9, "whisper-medium": 0.76e9,
+    "mamba2-370m": 0.37e9, "jamba-1.5-large-398b": 94e9,
+    "llama-3.2-vision-90b": 88e9,
+}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Per-device useful FLOPs (6ND train / 2ND forward), GP cells
+    handled separately."""
+    seq, batch = SHAPE_TOKENS[shape]
+    n = ACTIVE_PARAMS[arch]
+    mult = 6.0 if shape == "train_4k" else 2.0
+    return mult * n * seq * batch / CHIPS
+
+
+def gp_model_flops(pop: int, rows: int, nodes: int = 63) -> float:
+    """GP useful work: one primitive application per (tree-node × point)."""
+    return pop * nodes * rows / CHIPS
+
+
+def analyze_cell(json_path: str) -> dict | None:
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return rec
+    hlo_path = json_path.replace(".json", ".hlo.txt")
+    if os.path.exists(hlo_path):
+        cost = analyze_file(hlo_path)
+    else:
+        cost = {"flops": rec["flops"], "bytes": rec["bytes_accessed"],
+                "collective_bytes": sum(rec["collective_bytes"].values()),
+                "collectives": rec["collective_bytes"]}
+    arch, shape = rec["arch"], rec.get("shape", "")
+    t_c = cost["flops"] / PEAK_FLOPS
+    t_m = cost["bytes"] / HBM_BW
+    t_coll = cost["collective_bytes"] / LINK_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    if arch in ACTIVE_PARAMS and shape in SHAPE_TOKENS:
+        mf = model_flops(arch, shape)
+    elif arch.startswith("karoo"):
+        import re as _re
+        mpop = _re.search(r"pop(\d+)", shape)
+        mrows = _re.search(r"rows(\d+)", shape)
+        mf = (gp_model_flops(int(mpop.group(1)), int(mrows.group(1)))
+              if mpop and mrows else 0.0)
+    else:
+        mf = 0.0
+    bound = max(terms.values())
+    rec.update({
+        "hlo_flops": cost["flops"], "hlo_bytes": cost["bytes"],
+        "hlo_collective_bytes": cost["collective_bytes"],
+        "hlo_collectives": cost.get("collectives", {}),
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": (mf / cost["flops"]) if cost["flops"] else 0.0,
+        "roofline_fraction": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+    })
+    return rec
+
+
+def build_table(art_dir: str = "benchmarks/artifacts/dryrun",
+                out_path: str = "benchmarks/artifacts/roofline.json"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*_sp.json"))):
+        rec = analyze_cell(p)
+        if rec:
+            rows.append(rec)
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def fmt_table(rows) -> str:
+    head = (f"{'arch':26s} {'shape':12s} {'dom':10s} {'t_comp':>9s} {'t_mem':>9s} "
+            f"{'t_coll':>9s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r.get('arch',''):26s} {r.get('shape',''):12s} "
+                         f"{r.get('status')}")
+            continue
+        lines.append(
+            f"{r['arch']:26s} {str(r.get('shape','')):12s} {r['dominant']:10s} "
+            f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+            f"{r['t_collective_s']:9.4f} {r['useful_ratio']:7.3f} "
+            f"{100*r['roofline_fraction']:7.2f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = build_table(*(sys.argv[1:] or []))
+    print(fmt_table(rows))

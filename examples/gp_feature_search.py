@@ -1,0 +1,72 @@
+"""Integration demo: GP symbolic search over LM activation statistics.
+
+Composes both halves of the framework on one host: a reduced LM from the
+assigned-architecture zoo produces per-position residual-stream statistics,
+and the paper's GP engine evolves a symbolic expression over those
+statistics that predicts the model's own per-token loss. (This is a demo
+of the two subsystems sharing one mesh/runtime — not a claim from the
+paper; DESIGN.md §5.)
+
+    PYTHONPATH=src python examples/gp_feature_search.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core import GPConfig, TreeSpec, FitnessSpec, run
+from repro.core.trees import to_string
+from repro.data.loader import feature_major, lm_batches
+from repro.models import model as Md
+from repro.models import transformer as T
+
+
+def activation_features(cfg, params, batch):
+    """Per-position features from the residual stream + per-token CE."""
+    dt = jnp.float32
+    p = Md._cast(params, dt)
+    x = T.embed_tokens(cfg, p["tok"], batch["tokens"])
+    x, _ = T.stack_apply_train(cfg, p["stack"], x, cfg.pattern)
+    x = T._apply_norm(cfg, p["final_norm"], x)
+    W = p["tok"]["embed"].T if cfg.tie_embeddings else p["tok"]["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, W)
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], -1)[..., 0]
+    nll = lse - gold  # [B, S]
+    feats = jnp.stack([
+        jnp.linalg.norm(x, axis=-1),          # residual norm
+        x.mean(-1), x.std(-1),                # stream stats
+        jnp.abs(x).max(-1),                   # peak activation
+        lse,                                  # log partition
+        logits.max(-1),                       # max logit
+    ], axis=-1)  # [B, S, 6]
+    return np.asarray(feats).reshape(-1, 6), np.asarray(nll).reshape(-1)
+
+
+def main():
+    cfg = get_reduced("gemma-2b")
+    params = Md.init_params(cfg, jax.random.PRNGKey(0))
+    batch = next(lm_batches(cfg.vocab, 8, 64, seed=1))
+    X_rows, y = activation_features(cfg, params, batch)
+    print(f"features: {X_rows.shape}, target: per-token NLL "
+          f"(mean {y.mean():.3f})")
+
+    spec = TreeSpec(max_depth=4, n_features=6, n_consts=8)
+    gp = GPConfig(name="feature-search", pop_size=120, tree_spec=spec,
+                  fitness=FitnessSpec("r"), generations=20)
+    state = run(gp, feature_major(X_rows), y, key=jax.random.PRNGKey(1))
+    names = ["norm", "mean", "std", "amax", "lse", "maxlogit"]
+    expr = to_string(np.asarray(state.best_op), np.asarray(state.best_arg),
+                     feature_names=names,
+                     const_table=np.asarray(spec.const_table()))
+    base = np.abs(y - y.mean()).sum()
+    print(f"evolved loss-predictor: {expr}")
+    print(f"sum|err| {float(state.best_fitness):.2f} vs mean-baseline {base:.2f}")
+    assert float(state.best_fitness) < base, "GP should beat the mean predictor"
+
+
+if __name__ == "__main__":
+    main()

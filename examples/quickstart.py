@@ -1,0 +1,39 @@
+"""Quickstart: rediscover Kepler's 3rd law with the vectorized GP engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+The engine evolves symbolic expressions over (orbital radius r) to predict
+(orbital period p); the known answer is p = sqrt(r^3). Runs in seconds on
+CPU — the same engine scales to a 512-chip mesh via launch/dryrun.py.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.core import GPConfig, TreeSpec, FitnessSpec, run
+from repro.core import primitives as prim
+from repro.core.trees import to_string
+from repro.data.datasets import kepler
+from repro.data.loader import feature_major
+
+
+def main():
+    X_rows, y, meta = kepler()
+    spec = TreeSpec(max_depth=5, n_features=1, n_consts=8,
+                    fn_set=prim.KITCHEN_SINK)
+    cfg = GPConfig(name="kepler-quickstart", pop_size=200, tree_spec=spec,
+                   fitness=FitnessSpec("r"), generations=30)
+    state = run(cfg, feature_major(X_rows), y, key=jax.random.PRNGKey(0),
+                callback=lambda g, s: g % 10 == 0 and print(
+                    f"gen {g:2d}  best sum|err| = {float(s.best_fitness):.4f}"))
+    tree = to_string(np.asarray(state.best_op), np.asarray(state.best_arg),
+                     feature_names=["r"],
+                     const_table=np.asarray(spec.const_table()))
+    print(f"\nBest evolved law: p = {tree}")
+    print(f"Residual: {float(state.best_fitness):.5f} (sum |err| over 9 planets)")
+
+
+if __name__ == "__main__":
+    main()

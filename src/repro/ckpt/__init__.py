@@ -1,0 +1,3 @@
+"""Fault-tolerant checkpointing + elastic resharding."""
+from repro.ckpt.checkpoint import CheckpointManager, restore, save  # noqa: F401
+from repro.ckpt.elastic import reshard_state  # noqa: F401

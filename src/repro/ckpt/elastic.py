@@ -1,0 +1,29 @@
+"""Elastic scaling: reshard a restored train state onto a different mesh.
+
+Checkpoints store whole (host-gathered) leaves, so restarting on a mesh
+with a different device count is just a re-placement: compute the sharding
+rules for the NEW mesh and `device_put` each leaf. Divisibility fallbacks
+in launch/sharding.py mean the same rules produce legal layouts at any
+axis size — the property test in tests/test_ckpt.py restores a state saved
+from a (2,2) mesh onto (4,1) and (1,2) meshes and checks bit-equality.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.launch import sharding as SH
+
+
+def reshard_state(state_host, cfg, mesh):
+    """Host-side train state → device arrays sharded for `mesh`."""
+    cfg = cfg.with_policy(cfg.policy) if cfg.policy else cfg
+    shapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state_host)
+    specs = SH.train_state_specs(cfg, shapes, mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), state_host, specs)
+
+
+def reshard_tree(tree_host, spec_tree, mesh):
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree_host, spec_tree)

@@ -1,0 +1,8 @@
+"""Core GP engine — the paper's contribution as a composable JAX module.
+
+Tensorized tree populations, vectorized evaluation, fitness kernels,
+jittable genetic operators, and the sharded generation step.
+"""
+from repro.core.engine import GPConfig, GPState, evolve_step, init_state, run, sharded_evolve_step  # noqa: F401
+from repro.core.fitness import FitnessSpec  # noqa: F401
+from repro.core.trees import TreeSpec  # noqa: F401

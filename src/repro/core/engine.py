@@ -1,0 +1,233 @@
+"""KarooEngine — the generation loop, single-device and mesh-sharded.
+
+Workflow (paper §2.4): build population → evaluate fitness → select →
+apply genetic operators → repeat. Step 2 is the parallel hot spot; here it
+is one jitted program per generation, and under `shard_map` it distributes
+as:
+
+    data axis   : dataset columns sharded; per-tree fitness partials are
+                  `psum`-reduced (the paper's vectorized-evaluation axis)
+    model axis  : population sharded; selection needs the global fitness
+                  vector + parent pool, an O(pop·nodes) `all_gather` (tiny
+                  next to evaluation, paper §2.3)
+    pod axis    : island-model populations with periodic elite migration
+                  (core/islands.py) — the multi-pod story
+
+Engine state is a pytree, so checkpointing/restore reuses ckpt/ unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import evolve as ev
+from repro.core import fitness as fit
+from repro.core.trees import TreeSpec, generate_population
+
+
+@dataclasses.dataclass(frozen=True)
+class GPConfig:
+    """Run-time parameters (paper Table 2 defaults)."""
+
+    name: str = "karoo"
+    pop_size: int = 100
+    tree_spec: TreeSpec = TreeSpec()
+    fitness: fit.FitnessSpec = fit.FitnessSpec()
+    mix: ev.OperatorMix = ev.OperatorMix()
+    tourn_size: int = 10
+    generations: int = 30
+    elitism: int = 1
+    parsimony: float = 0.0  # bloat pressure: selection fitness += p * size
+    stop_fitness: float | None = None  # early termination threshold (run())
+    eval_impl: str = "jnp"  # 'jnp' | 'pallas'
+    data_tile: int = 1024  # pallas data-tile (lane-dim multiple of 128)
+    migrate_every: int = 10  # pod-axis island migration period
+    migrate_k: int = 4  # elites exchanged per migration
+
+    def __hash__(self):
+        return hash((self.name, self.pop_size, self.tree_spec, self.fitness, self.mix,
+                     self.tourn_size, self.generations, self.elitism, self.parsimony,
+                     self.stop_fitness, self.eval_impl,
+                     self.data_tile, self.migrate_every, self.migrate_k))
+
+
+class GPState(NamedTuple):
+    key: jax.Array
+    op: jax.Array  # int32[P, N]
+    arg: jax.Array  # int32[P, N]
+    fitness: jax.Array  # float32[P] (of current population, minimize)
+    best_op: jax.Array  # int32[N]
+    best_arg: jax.Array  # int32[N]
+    best_fitness: jax.Array  # float32[]
+    generation: jax.Array  # int32[]
+
+
+def _eval_fitness(cfg: GPConfig, op, arg, X, y, const_table):
+    """Dispatch to the Pallas fused kernel or the jnp reference path (tiled
+    over data so the [pop, nodes, data] buffer is HBM-bounded)."""
+    if cfg.eval_impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.fitness(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
+                            data_tile=cfg.data_tile)
+    from repro.kernels.ref import fitness_ref_tiled
+
+    return fitness_ref_tiled(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness)
+
+
+def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
+    """Fresh state; `seeds` (expression strings) populate the first slots —
+    Karoo's customized seed populations (paper §2.2)."""
+    k0, k1 = jax.random.split(key)
+    if seeds:
+        from repro.core.parse import seed_population
+
+        op, arg = seed_population(seeds, cfg.tree_spec, cfg.pop_size, k1,
+                                  feature_names)
+    else:
+        op, arg = generate_population(k1, cfg.pop_size, cfg.tree_spec)
+    N = cfg.tree_spec.num_nodes
+    return GPState(
+        key=k0, op=op, arg=arg,
+        fitness=jnp.full((cfg.pop_size,), jnp.inf, jnp.float32),
+        best_op=jnp.zeros((N,), jnp.int32), best_arg=jnp.zeros((N,), jnp.int32),
+        best_fitness=jnp.asarray(jnp.inf, jnp.float32),
+        generation=jnp.asarray(0, jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def evolve_step(cfg: GPConfig, state: GPState, X, y) -> GPState:
+    """One generation on a single device. X: [F, D] feature-major, y: [D]."""
+    const_table = cfg.tree_spec.const_table()
+    fitness = _eval_fitness(cfg, state.op, state.arg, X, y, const_table)
+    # best tracked on RAW fitness; selection may add parsimony pressure
+    i = jnp.argmin(fitness)
+    improved = fitness[i] < state.best_fitness
+    best_op = jnp.where(improved, state.op[i], state.best_op)
+    best_arg = jnp.where(improved, state.arg[i], state.best_arg)
+    best_fit = jnp.minimum(fitness[i], state.best_fitness)
+
+    sel_fitness = fitness
+    if cfg.parsimony:
+        from repro.core.trees import tree_sizes
+
+        sel_fitness = fitness + cfg.parsimony * tree_sizes(state.op).astype(jnp.float32)
+
+    key, k_next = jax.random.split(state.key)
+    new_op, new_arg = ev.next_generation(
+        k_next, state.op, state.arg, sel_fitness, cfg.tree_spec, cfg.mix,
+        cfg.tourn_size, cfg.elitism)
+    return GPState(key, new_op, new_arg, fitness, best_op, best_arg, best_fit,
+                   state.generation + 1)
+
+
+def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
+        callback=None, seeds=None, feature_names=None) -> GPState:
+    """Drive `generations` steps (host loop — each step is one XLA program).
+    Stops early when `cfg.stop_fitness` is reached (Karoo's termination
+    criteria; the paper's benchmark runs disable it, §3.2)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    state = init_state(cfg, key, seeds=seeds, feature_names=feature_names)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    for g in range(generations or cfg.generations):
+        state = evolve_step(cfg, state, X, y)
+        if callback is not None:
+            callback(g, state)
+        if cfg.stop_fitness is not None and float(state.best_fitness) <= cfg.stop_fitness:
+            break
+    return state
+
+
+# --- mesh-sharded step --------------------------------------------------------
+
+
+def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="model",
+                        pod_axis: str | None = None):
+    """Build a shard_map'd generation step for `mesh`.
+
+    Shardings: X,y on (data,); the population's leading axis on
+    (pod, model) — the pod slices are the islands, the model slices are
+    a pod's parallel evaluation shards. Returns (step_fn, specs dict)
+    ready for jit/lower. best_* is replicated (global argmin over pods).
+    """
+    from repro.core.islands import migrate
+
+    pod_dims = (pod_axis,) if pod_axis else ()
+    n_shards = mesh.shape[model_axis]
+    for a in pod_dims:
+        n_shards *= mesh.shape[a]
+    if cfg.pop_size % n_shards:
+        raise ValueError(f"pop_size {cfg.pop_size} % population shards {n_shards} != 0")
+    n_model = mesh.shape[model_axis]
+
+    pop_spec = P((*pod_dims, model_axis))
+    data_spec = P(None, data_axis)  # X is [F, D]
+    y_spec = P(data_axis)
+    state_specs = GPState(
+        key=P(), op=pop_spec, arg=pop_spec, fitness=pop_spec,
+        best_op=P(), best_arg=P(), best_fitness=P(), generation=P(),
+    )
+
+    def step(state: GPState, X, y) -> GPState:
+        const_table = cfg.tree_spec.const_table()
+        # --- evaluate: local pop shard x local data shard; psum over data
+        partial_fit = _eval_fitness(cfg, state.op, state.arg, X, y, const_table)
+        fitness_local = jax.lax.psum(partial_fit, data_axis)
+        # --- selection pool = this pod's population: tiny all_gather
+        fitness_g = jax.lax.all_gather(fitness_local, model_axis, tiled=True)
+        op_g = jax.lax.all_gather(state.op, model_axis, tiled=True)
+        arg_g = jax.lax.all_gather(state.arg, model_axis, tiled=True)
+
+        # --- pod-local best, then global best across pods (replicated)
+        i = jnp.argmin(fitness_g)
+        cand_fit, cand_op, cand_arg = fitness_g[i], op_g[i], arg_g[i]
+        if pod_axis:
+            pods_fit = jax.lax.all_gather(cand_fit, pod_axis)  # [n_pods]
+            pods_op = jax.lax.all_gather(cand_op, pod_axis)  # [n_pods, N]
+            pods_arg = jax.lax.all_gather(cand_arg, pod_axis)
+            j = jnp.argmin(pods_fit)
+            cand_fit, cand_op, cand_arg = pods_fit[j], pods_op[j], pods_arg[j]
+        improved = cand_fit < state.best_fitness
+        best_op = jnp.where(improved, cand_op, state.best_op)
+        best_arg = jnp.where(improved, cand_arg, state.best_arg)
+        best_fit = jnp.minimum(cand_fit, state.best_fitness)
+
+        # --- offspring for this shard's slice only (decorrelated RNG)
+        rank = jax.lax.axis_index(model_axis)
+        key = state.key
+        if pod_axis:
+            key = jax.random.fold_in(key, jax.lax.axis_index(pod_axis))
+        key = jax.random.fold_in(key, state.generation)
+        k_rank = jax.random.fold_in(key, rank)
+        n_local = cfg.pop_size // n_shards
+        new_op, new_arg = ev.next_generation(
+            k_rank, op_g, arg_g, fitness_g, cfg.tree_spec, cfg.mix,
+            cfg.tourn_size, elitism=0, n_out=n_local)
+        # elitism: rank 0 of each pod re-seeds the pod's own champion
+        if cfg.elitism:
+            keep = rank == 0
+            new_op = new_op.at[0].set(jnp.where(keep, op_g[i], new_op[0]))
+            new_arg = new_arg.at[0].set(jnp.where(keep, arg_g[i], new_arg[0]))
+        if pod_axis:
+            order = jnp.argsort(fitness_g)[:cfg.migrate_k]
+            new_op, new_arg = migrate(
+                cfg, new_op, new_arg, op_g[order], arg_g[order],
+                state.generation, pod_axis, is_receiver=rank == n_model - 1)
+        return GPState(state.key, new_op, new_arg, fitness_local, best_op, best_arg,
+                       best_fit, state.generation + 1)
+
+    smapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(state_specs, data_spec, y_spec),
+        out_specs=state_specs,
+        check_vma=False,
+    )
+    return smapped, dict(state=state_specs, X=data_spec, y=y_spec)

@@ -1,0 +1,63 @@
+"""Vectorized population evaluation — the paper's core technique, in JAX.
+
+The paper transposes the dataset so each feature is a vector (its Eq. 1→2)
+and evaluates each tree's expression as a TensorFlow graph over those
+vectors. Here the *whole population* is evaluated by one level-synchronous
+sweep over the heap encoding:
+
+    for level d = max_depth .. 0:
+        node_val[d] = select(opcode, f(child_vals[d+1]), terminal_vals)
+
+Every step is a fused elementwise select over a [pop, 2**d, data] block —
+one static XLA program for any population content. This module is the pure
+jnp reference path; kernels/gp_eval.py is the Pallas TPU version of the
+same contraction (fused with the fitness reduction), and kernels/ref.py
+re-exports these functions as the kernel oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as prim
+from repro.core.trees import TreeSpec
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def evaluate_population(op, arg, X, const_table, spec: TreeSpec):
+    """Evaluate every tree against every data point.
+
+    op, arg:     int32[P, N]        heap population
+    X:           float[F, D]        feature-major data (the paper's Eq. 2 layout)
+    const_table: float[C]
+    returns      float32[P, D]      predictions
+    """
+    P, N = op.shape
+    D = X.shape[1]
+    max_depth = (N + 1).bit_length() - 2
+    X = X.astype(jnp.float32)
+    const_table = const_table.astype(jnp.float32)
+
+    vals = None  # child-level buffer [P, 2**(d+1), D]
+    for d in range(max_depth, -1, -1):
+        lo, w = 2**d - 1, 2**d
+        opd = op[:, lo:lo + w, None]  # [P, w, 1]
+        argd = arg[:, lo:lo + w]
+        feat = X[jnp.clip(argd, 0, X.shape[0] - 1)]  # [P, w, D] gather
+        cons = const_table[jnp.clip(argd, 0, const_table.shape[0] - 1)][..., None]
+        node = jnp.where(opd == prim.FEATURE, feat, jnp.broadcast_to(cons, (P, w, D)))
+        if vals is not None:
+            lhs, rhs = vals[:, 0::2], vals[:, 1::2]
+            fn = prim.apply_function(opd, lhs, rhs, spec.fn_set)
+            node = jnp.where(opd >= 3, fn, node)
+        node = jnp.where(opd == prim.EMPTY, 0.0, node)
+        vals = node
+    return vals[:, 0]  # [P, D]
+
+
+def evaluate_tree(op_row, arg_row, X, const_table, spec: TreeSpec):
+    """Single-tree convenience wrapper (used by tests/examples)."""
+    preds = evaluate_population(op_row[None], arg_row[None], X, const_table, spec)
+    return preds[0]

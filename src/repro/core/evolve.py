@@ -1,0 +1,180 @@
+"""Genetic operators on heap-tensor populations — all jittable.
+
+Karoo GP's tournament selection, reproduction, mutation and crossover
+(`fx_evolve_*`) are "computationally inexpensive bookkeeping" next to
+evaluation (paper §2.3) — but on TPU they must still be branch-free so the
+whole generation step stays one program. Subtree crossover/mutation become
+integer path arithmetic on heap indices:
+
+  heap slot i ↔ 1-based code (i+1) whose binary digits below the leading 1
+  spell the root-to-node path. Moving the subtree rooted at source slot b
+  into target slot a maps every target descendant t (relative path suffix
+  s, depth k below a) to source slot ((b+1) << k) + s - 1.
+
+Transplants that would overflow the depth ceiling are repaired by demoting
+dangling max-depth function nodes to terminals — the same bloat ceiling
+Karoo enforces at generation time (DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import primitives as prim
+from repro.core.trees import TreeSpec, depth_table, generate_population
+
+
+# --- random node choice ------------------------------------------------------
+
+
+def _random_active_node(key, op):
+    """Uniform random non-EMPTY slot per tree via Gumbel-argmax.
+
+    op: int32[..., N] → int32[...] heap index.
+    """
+    g = jax.random.gumbel(key, op.shape)
+    score = jnp.where(op != prim.EMPTY, g, -jnp.inf)
+    return jnp.argmax(score, axis=-1).astype(jnp.int32)
+
+
+# --- subtree transplant (shared by crossover + branch mutation) -------------
+
+
+def _transplant(op_t, arg_t, op_s, arg_s, a, b, spec: TreeSpec):
+    """Replace the subtree at slot `a` of the target tree with the subtree
+    at slot `b` of the source tree. Single tree; vmap for populations."""
+    N = spec.num_nodes
+    DEPTH = jnp.asarray(depth_table(N))
+    t = jnp.arange(N, dtype=jnp.int32)
+    k = DEPTH - DEPTH[a]  # relative depth of slot t under a
+    kc = jnp.maximum(k, 0)
+    in_sub = (k >= 0) & (((t + 1) >> kc) == (a + 1))
+    rel = (t + 1) - ((a + 1) << kc)  # path suffix as offset in level k
+    src1 = ((b + 1) << kc) + rel  # 1-based source slot
+    valid = in_sub & (src1 <= N)
+    src = jnp.clip(src1 - 1, 0, N - 1)
+    new_op = jnp.where(valid, op_s[src], jnp.where(in_sub, prim.EMPTY, op_t))
+    new_arg = jnp.where(valid, arg_s[src], jnp.where(in_sub, 0, arg_t))
+    # Depth-ceiling repair (I4): a function copied to the last level has no
+    # room for children -> demote to a feature terminal.
+    at_leaf = DEPTH == spec.max_depth
+    dangling = at_leaf & (jnp.asarray(prim.ARITY)[new_op] > 0)
+    new_op = jnp.where(dangling, prim.FEATURE, new_op)
+    new_arg = jnp.where(dangling, (t + new_arg) % spec.n_features, new_arg)
+    return new_op, new_arg
+
+
+_transplant_pop = jax.vmap(_transplant, in_axes=(0, 0, 0, 0, 0, 0, None))
+
+
+# --- operators ----------------------------------------------------------------
+
+
+def crossover(key, op_a, arg_a, op_b, arg_b, spec: TreeSpec):
+    """Subtree crossover: offspring = parent A with a random branch of B
+    grafted at a random point (Karoo's fx_evolve_crossover)."""
+    P = op_a.shape[0]
+    del P  # shapes carried by the population arrays themselves
+    ka, kb = jax.random.split(key)
+    pt_a = _random_active_node(ka, op_a)
+    pt_b = _random_active_node(kb, op_b)
+    return _transplant_pop(op_a, arg_a, op_b, arg_b, pt_a, pt_b, spec)
+
+
+def mutate_branch(key, op, arg, spec: TreeSpec):
+    """Branch mutation: replace a random subtree with a fresh random tree
+    (Karoo's fx_evolve_branch_mutate)."""
+    P = op.shape[0]
+    kp, kg = jax.random.split(key)
+    pt = _random_active_node(kp, op)
+    fresh_op, fresh_arg = generate_population(kg, P, spec)
+    root = jnp.zeros((P,), jnp.int32)
+    return _transplant_pop(op, arg, fresh_op, fresh_arg, pt, root, spec)
+
+
+def mutate_point(key, op, arg, spec: TreeSpec, p: float = 0.25):
+    """Point mutation: independently redraw nodes in place, arity-preserving
+    (Karoo's fx_evolve_point_mutate)."""
+    km, kf, ku, kt, ks = jax.random.split(key, 5)
+    hit = jax.random.bernoulli(km, p, op.shape)
+    arity = jnp.asarray(prim.ARITY)[op]
+    bin_ops = jnp.asarray(spec.fn_set.binary_opcodes)
+    new_bin = bin_ops[jax.random.randint(kf, op.shape, 0, len(bin_ops))]
+    una = spec.fn_set.unary_opcodes
+    new_una = (jnp.asarray(una)[jax.random.randint(ku, op.shape, 0, max(len(una), 1))]
+               if len(una) else op)
+    t_op, t_arg = jax.random.bernoulli(kt, spec.p_const, op.shape), None
+    new_t_op = jnp.where(t_op, prim.CONST, prim.FEATURE)
+    new_t_arg = jnp.where(
+        t_op,
+        jax.random.randint(ks, op.shape, 0, spec.n_consts),
+        jax.random.randint(ks, op.shape, 0, spec.n_features),
+    )
+    new_op = jnp.where(arity == 2, new_bin, jnp.where(arity == 1, new_una, new_t_op))
+    new_arg = jnp.where(arity == 0, new_t_arg, arg)
+    new_op = jnp.where((op == prim.EMPTY) | ~hit, op, new_op)
+    new_arg = jnp.where((op == prim.EMPTY) | ~hit, arg, new_arg)
+    return new_op, new_arg
+
+
+def tournament(key, fitness, pop: int, size: int):
+    """Minimizing tournament selection → int32[pop] winner indices."""
+    idx = jax.random.randint(key, (pop, size), 0, fitness.shape[0])
+    scores = fitness[idx]
+    return idx[jnp.arange(pop), jnp.argmin(scores, axis=-1)].astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatorMix:
+    """Karoo Table 2 defaults: 10% reproduction / 20% mutation / 70% crossover.
+    Mutation is split evenly between point and branch mutation."""
+
+    reproduce: float = 0.10
+    mutate_point: float = 0.10
+    mutate_branch: float = 0.10
+    crossover: float = 0.70
+
+    def __hash__(self):
+        return hash((self.reproduce, self.mutate_point, self.mutate_branch, self.crossover))
+
+
+@partial(jax.jit, static_argnames=("spec", "mix", "tourn_size", "elitism", "n_out"))
+def next_generation(key, op, arg, fitness, spec: TreeSpec, mix: OperatorMix = OperatorMix(),
+                    tourn_size: int = 10, elitism: int = 1, n_out: int | None = None):
+    """One full selection + variation step. [P,N] -> [n_out,N], fixed shapes.
+
+    Every offspring slot draws an operator from the mix; all operator
+    outputs are computed vectorized and the per-slot result selected —
+    branch-free, so the program is identical every generation (trees are
+    tiny: the <3x redundant work is noise next to evaluation, paper §2.3).
+    `n_out` decouples offspring count from parent-pool size so a
+    model-axis shard can produce just its slice of the next generation.
+    """
+    P = n_out or op.shape[0]
+    k_op, k_t1, k_t2, k_x, k_mb, k_mp = jax.random.split(key, 6)
+
+    probs = jnp.array([mix.reproduce, mix.mutate_point, mix.mutate_branch, mix.crossover])
+    choice = jax.random.categorical(k_op, jnp.log(probs), shape=(P,))
+
+    parent_a = tournament(k_t1, fitness, P, tourn_size)
+    parent_b = tournament(k_t2, fitness, P, tourn_size)
+    op_a, arg_a = op[parent_a], arg[parent_a]
+    op_b, arg_b = op[parent_b], arg[parent_b]
+
+    op_x, arg_x = crossover(k_x, op_a, arg_a, op_b, arg_b, spec)
+    op_mb, arg_mb = mutate_branch(k_mb, op_a, arg_a, spec)
+    op_mp, arg_mp = mutate_point(k_mp, op_a, arg_a, spec)
+
+    c = choice[:, None]
+    new_op = jnp.where(c == 0, op_a, jnp.where(c == 1, op_mp, jnp.where(c == 2, op_mb, op_x)))
+    new_arg = jnp.where(c == 0, arg_a, jnp.where(c == 1, arg_mp, jnp.where(c == 2, arg_mb, arg_x)))
+
+    if elitism:
+        best = jnp.argsort(fitness)[:elitism]
+        new_op = new_op.at[:elitism].set(op[best])
+        new_arg = new_arg.at[:elitism].set(arg[best])
+    return new_op, new_arg

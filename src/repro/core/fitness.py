@@ -1,0 +1,58 @@
+"""Fitness kernels — Karoo GP's (r)egression, (c)lassification, (m)atch.
+
+Karoo appends a per-kernel fitness sub-graph to each tree's TF graph; we
+fuse the same reductions after the vectorized evaluation. All kernels
+return a per-tree score under a common MINIMIZE convention (classify and
+match are negated hit-counts) so selection code is kernel-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+REGRESSION = "r"
+CLASSIFY = "c"
+MATCH = "m"
+
+
+@dataclasses.dataclass(frozen=True)
+class FitnessSpec:
+    kernel: str = REGRESSION  # 'r' | 'c' | 'm'
+    n_classes: int = 3  # classify only
+    precision: float = 1e-4  # match tolerance (paper: 4 decimal places)
+
+    def __hash__(self):
+        return hash((self.kernel, self.n_classes, self.precision))
+
+
+def classify_labels(preds, n_classes: int):
+    """Karoo's classification binning: round the regression output into
+    {0..n_classes-1} with saturating ends."""
+    return jnp.clip(jnp.round(preds), 0, n_classes - 1).astype(jnp.int32)
+
+
+def fitness_from_preds(preds, y, spec: FitnessSpec):
+    """preds: [P, D] predictions; y: [D] targets. Returns float32[P] (minimize)."""
+    y = y.astype(jnp.float32)
+    if spec.kernel == REGRESSION:
+        err = jnp.abs(preds - y[None, :])
+        # inf-inf in an evolved expression yields NaN; a NaN fitness must
+        # never win a tournament -> sanitize to +inf (minimize convention)
+        return jnp.where(jnp.isnan(err), jnp.inf, err).sum(-1)
+    if spec.kernel == CLASSIFY:
+        hits = (classify_labels(preds, spec.n_classes) == y[None, :].astype(jnp.int32)).sum(-1)
+        return -hits.astype(jnp.float32)
+    if spec.kernel == MATCH:
+        hits = (jnp.abs(preds - y[None, :]) <= spec.precision).sum(-1)
+        return -hits.astype(jnp.float32)
+    raise ValueError(f"unknown fitness kernel {spec.kernel!r}")
+
+
+def accuracy_from_preds(preds, y, spec: FitnessSpec):
+    """Human-facing metric (fraction correct / mean abs err) for reporting."""
+    if spec.kernel == CLASSIFY:
+        return (classify_labels(preds, spec.n_classes) == y[None, :].astype(jnp.int32)).mean(-1)
+    if spec.kernel == MATCH:
+        return (jnp.abs(preds - y[None, :]) <= spec.precision).mean(-1)
+    return jnp.abs(preds - y[None, :]).mean(-1)

@@ -1,0 +1,40 @@
+"""Island-model evolution across the pod axis.
+
+The paper never leaves a single system board (§3.4: "Karoo was not tested
+across a tightly coupled parallel cluster"). To make the technique
+runnable at pod scale we use the classic GP island model: each pod evolves
+an independent sub-population (decorrelated RNG via fold_in(pod_index)),
+and every `migrate_every` generations each pod's `migrate_k` best trees
+ride a ring `collective_permute` to the next pod, replacing offspring
+slots there. Migration volume is O(k · nodes) bytes — negligible against
+evaluation — and overlaps with the generation step under XLA's scheduler.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def migrate(cfg, op_local, arg_local, elite_op, elite_arg, generation,
+            pod_axis: str, is_receiver):
+    """Ring-migrate pod elites (called inside shard_map).
+
+    op_local/arg_local: int32[P_local, N] — this device's slice of the NEW
+    generation. elite_op/elite_arg: int32[k, N] — this pod's best k trees
+    from the just-evaluated population (replicated within the pod, so
+    every model-rank performs an identical permute). The receiving rank
+    (`is_receiver`, one per pod) overwrites its last k offspring slots
+    when a migration generation comes due.
+    """
+    n_pods = jax.lax.axis_size(pod_axis)
+    if n_pods <= 1:
+        return op_local, arg_local
+    k = cfg.migrate_k
+    perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
+    mig_op = jax.lax.ppermute(elite_op, pod_axis, perm)
+    mig_arg = jax.lax.ppermute(elite_arg, pod_axis, perm)
+
+    due = ((generation % cfg.migrate_every) == (cfg.migrate_every - 1)) & is_receiver
+    new_op = jnp.where(due, op_local.at[-k:].set(mig_op), op_local)
+    new_arg = jnp.where(due, arg_local.at[-k:].set(mig_arg), arg_local)
+    return new_op, new_arg

@@ -1,0 +1,133 @@
+"""Primitive (opcode) table for tensorized GP trees.
+
+Karoo GP evaluates evolved multivariate expressions. In the paper each
+expression becomes a TensorFlow graph whose nodes are vectorized ops
+(tf.add, tf.multiply, ...). Here the expression population is *data*:
+every node is an (opcode, argument) pair in a fixed-size heap tensor, and
+a single jitted interpreter evaluates all trees at once.
+
+Opcode space
+------------
+  0            EMPTY      unused slot (evaluates to 0.0, never selected)
+  1            CONST      terminal: const_table[arg]
+  2            FEATURE    terminal: X[arg]  (arg = feature column index)
+  3..          functions  (see FUNCTIONS below; unary ops ignore rhs)
+
+Protected semantics match Karoo GP's TensorFlow operators: division,
+log and sqrt are "protected" so population evaluation can never produce
+NaN/Inf from a syntactically valid tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- opcode constants -------------------------------------------------------
+EMPTY = 0
+CONST = 1
+FEATURE = 2
+_FN_BASE = 3
+
+_EPS = 1e-9
+
+
+def _protected_div(a, b):
+    return jnp.where(jnp.abs(b) < _EPS, jnp.ones_like(a), a / jnp.where(jnp.abs(b) < _EPS, jnp.ones_like(b), b))
+
+
+def _protected_log(a, _):
+    return jnp.log(jnp.abs(a) + _EPS)
+
+
+def _protected_sqrt(a, _):
+    return jnp.sqrt(jnp.abs(a))
+
+
+@dataclasses.dataclass(frozen=True)
+class Primitive:
+    name: str
+    arity: int  # 1 or 2
+    fn: Callable  # (lhs, rhs) -> value; unary ops ignore rhs
+
+
+# Order matters: opcode = _FN_BASE + index into FUNCTIONS.
+FUNCTIONS: tuple[Primitive, ...] = (
+    Primitive("add", 2, lambda a, b: a + b),
+    Primitive("sub", 2, lambda a, b: a - b),
+    Primitive("mul", 2, lambda a, b: a * b),
+    Primitive("div", 2, _protected_div),
+    Primitive("neg", 1, lambda a, _: -a),
+    Primitive("abs", 1, lambda a, _: jnp.abs(a)),
+    Primitive("sin", 1, lambda a, _: jnp.sin(a)),
+    Primitive("cos", 1, lambda a, _: jnp.cos(a)),
+    Primitive("sqrt", 1, _protected_sqrt),
+    Primitive("log", 1, _protected_log),
+    Primitive("square", 1, lambda a, _: a * a),
+    Primitive("min", 2, jnp.minimum),
+    Primitive("max", 2, jnp.maximum),
+)
+
+N_OPCODES = _FN_BASE + len(FUNCTIONS)
+FN_NAMES = tuple(p.name for p in FUNCTIONS)
+ARITY = np.array([0, 0, 0] + [p.arity for p in FUNCTIONS], dtype=np.int32)
+
+
+def opcode_of(name: str) -> int:
+    return _FN_BASE + FN_NAMES.index(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSet:
+    """A user-selected subset of FUNCTIONS, as opcode arrays.
+
+    Karoo GP lets each run choose its operator set (the paper's runs use
+    arithmetic +-*/ for regression and a wider set for classification).
+    """
+
+    opcodes: np.ndarray  # int32[num_fns] opcodes drawn from FUNCTIONS
+    name: str = "custom"
+
+    @staticmethod
+    def make(names: Sequence[str], name: str = "custom") -> "FunctionSet":
+        return FunctionSet(np.array([opcode_of(n) for n in names], dtype=np.int32), name)
+
+    @property
+    def binary_opcodes(self) -> np.ndarray:
+        return self.opcodes[ARITY[self.opcodes] == 2]
+
+    @property
+    def unary_opcodes(self) -> np.ndarray:
+        return self.opcodes[ARITY[self.opcodes] == 1]
+
+
+ARITHMETIC = FunctionSet.make(("add", "sub", "mul", "div"), "arithmetic")
+KITCHEN_SINK = FunctionSet.make(FN_NAMES, "kitchen_sink")
+CLASSIFY_SET = FunctionSet.make(("add", "sub", "mul", "div", "abs", "min", "max"), "classify")
+
+
+def apply_function(op, lhs, rhs, fn_set: "FunctionSet | None" = None):
+    """Elementwise select over function opcodes.
+
+    op:        int array broadcastable against lhs/rhs
+    lhs, rhs:  float arrays (children values)
+    fn_set:    restrict the select chain to a run's operator set — a
+               population generated from k operators only ever contains
+               those opcodes, so evaluating the other 13-k branches is
+               pure waste (§Perf iteration: the compute term scales with
+               the branch count).
+
+    Computes each candidate primitive then selects — the standard
+    vectorized-interpreter trade (VPU ops instead of branchy control
+    flow). This is exactly what makes the whole population a single
+    static XLA program.
+    """
+    if fn_set is not None:
+        codes = [int(c) for c in fn_set.opcodes]
+    else:
+        codes = list(range(_FN_BASE, _FN_BASE + len(FUNCTIONS)))
+    branches = [FUNCTIONS[c - _FN_BASE].fn(lhs, rhs) for c in codes]
+    preds = [op == c for c in codes]
+    return jnp.select(preds, branches, jnp.zeros_like(lhs))

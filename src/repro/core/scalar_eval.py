@@ -1,0 +1,105 @@
+"""Paper-faithful scalar baseline — the "1-CPU_SP" configuration.
+
+Karoo GP v0.9.1.6 evaluated each tree's SymPy expression once *per data
+point* (scalar substitution), which is the slow baseline every figure in
+the paper compares against. This module reproduces that execution model:
+a recursive Python interpreter applied row by row, no vectorization, no
+jit. It exists so benchmarks/ can measure the same scalar-vs-vector axis
+the paper measures (Figs 1–3: 2x, 15x, 875x).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import primitives as prim
+
+_EPS = 1e-9
+
+
+def _apply(name: str, a, b):
+    """One primitive in true float32 arithmetic (np.float32 operands stay
+    f32 through + - * /), so protected-op branch decisions are bit-identical
+    to the vectorized engine's."""
+    f32 = np.float32
+    a = f32(a)
+    b = f32(b)
+    if name == "add":
+        return a + b
+    if name == "sub":
+        return a - b
+    if name == "mul":
+        return a * b
+    if name == "div":
+        return f32(1.0) if abs(b) < f32(_EPS) else a / b
+    if name == "neg":
+        return -a
+    if name == "abs":
+        return abs(a)
+    if name == "sin":
+        return f32(math.sin(a))
+    if name == "cos":
+        return f32(math.cos(a))
+    if name == "sqrt":
+        return f32(math.sqrt(abs(a)))
+    if name == "log":
+        return f32(math.log(abs(a) + f32(_EPS)))
+    if name == "square":
+        return a * a
+    if name == "min":
+        return min(a, b)
+    if name == "max":
+        return max(a, b)
+    raise ValueError(name)
+
+
+def eval_tree_scalar(op_row, arg_row, row, const_table, idx: int = 0) -> float:
+    """Evaluate one heap tree on ONE data row, recursively (the baseline).
+
+    Intermediates are rounded to float32 at every node so the baseline is
+    numerically faithful to the vectorized engine (Karoo's TF ops are f32;
+    comparing f64-vs-f32 interpreters would otherwise diverge around the
+    protected-division threshold)."""
+    o = int(op_row[idx])
+    if o == prim.EMPTY:
+        return 0.0
+    if o == prim.CONST:
+        return float(np.float32(const_table[int(arg_row[idx])]))
+    if o == prim.FEATURE:
+        return float(np.float32(row[int(arg_row[idx])]))
+    p = prim.FUNCTIONS[o - 3]
+    a = eval_tree_scalar(op_row, arg_row, row, const_table, 2 * idx + 1)
+    b = eval_tree_scalar(op_row, arg_row, row, const_table, 2 * idx + 2) if p.arity == 2 else 0.0
+    return float(np.float32(_apply(p.name, a, b)))
+
+
+def evaluate_population_scalar(op, arg, X_rows, const_table) -> np.ndarray:
+    """preds[p, d] via per-tree, per-row recursion. X_rows: [D, F] row-major
+    (the paper's Eq. 1 layout — the un-transposed original)."""
+    op = np.asarray(op)
+    arg = np.asarray(arg)
+    X_rows = np.asarray(X_rows)
+    const_table = np.asarray(const_table)
+    P, D = op.shape[0], X_rows.shape[0]
+    out = np.empty((P, D), np.float32)
+    for p in range(P):
+        for d in range(D):
+            out[p, d] = eval_tree_scalar(op[p], arg[p], X_rows[d], const_table)
+    return out
+
+
+def fitness_scalar(op, arg, X_rows, y, const_table, kernel: str = "r",
+                   n_classes: int = 3, precision: float = 1e-4) -> np.ndarray:
+    preds = evaluate_population_scalar(op, arg, X_rows, const_table)
+    y = np.asarray(y, np.float32)
+    if kernel == "r":
+        err = np.abs(preds - y[None])
+        err = np.where(np.isnan(err), np.inf, err)
+        return err.sum(-1)
+    if kernel == "c":
+        lab = np.clip(np.round(preds), 0, n_classes - 1).astype(np.int32)
+        return -(lab == y[None].astype(np.int32)).sum(-1).astype(np.float32)
+    if kernel == "m":
+        return -(np.abs(preds - y[None]) <= precision).sum(-1).astype(np.float32)
+    raise ValueError(kernel)

@@ -1,0 +1,203 @@
+"""Heap-tensor GP tree representation + ramped half-and-half generation.
+
+A population is a pair of integer tensors:
+
+    op  : int32[pop, NODES]   opcode per heap slot (see primitives)
+    arg : int32[pop, NODES]   feature index (FEATURE) or const index (CONST)
+
+NODES = 2**(max_depth+1) - 1 — a complete binary heap: node ``i`` has
+children ``2i+1``/``2i+2`` and depth ``floor(log2(i+1))``. The paper's
+``tree depth max = 5`` becomes NODES = 63. This encoding is the central
+TPU adaptation: the whole population is evaluated by one static,
+level-synchronous program (no per-tree graphs, no recompilation).
+
+Well-formedness invariants (preserved by generation and by every genetic
+operator in evolve.py):
+  I1  slot 0 (root) is never EMPTY;
+  I2  a binary-function slot has both children non-EMPTY; a unary slot has
+      a non-EMPTY left child and an EMPTY right child;
+  I3  terminal (CONST/FEATURE) and EMPTY slots have EMPTY children;
+  I4  slots at max depth hold terminals only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import primitives as prim
+
+# --- static index tables ----------------------------------------------------
+
+
+def n_nodes(max_depth: int) -> int:
+    return 2 ** (max_depth + 1) - 1
+
+
+def depth_table(num_nodes: int) -> np.ndarray:
+    """DEPTH[i] = depth of heap slot i."""
+    return np.floor(np.log2(np.arange(num_nodes) + 1)).astype(np.int32)
+
+
+def subtree_mask_table(num_nodes: int) -> np.ndarray:
+    """MASK[i, j] = True iff j is i or a descendant of i."""
+    depth = depth_table(num_nodes)
+    i = np.arange(num_nodes)[:, None] + 1  # 1-based
+    j = np.arange(num_nodes)[None, :] + 1
+    k = depth[None, :] - depth[:, None]  # relative depth of j under i
+    anc = np.where(k >= 0, j >> np.maximum(k, 0), -1)
+    return (anc == i) & (k >= 0)
+
+
+# --- generation spec ---------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpec:
+    """Static parameters of a tree population (hashable for jit)."""
+
+    max_depth: int = 5
+    n_features: int = 2
+    n_consts: int = 8
+    fn_set: prim.FunctionSet = prim.ARITHMETIC
+    p_const: float = 0.2  # probability a terminal is a constant
+    grow_p_fn: float = 0.6  # probability an internal slot is a function (grow)
+
+    def __hash__(self):
+        return hash((self.max_depth, self.n_features, self.n_consts,
+                     tuple(self.fn_set.opcodes.tolist()), self.p_const, self.grow_p_fn))
+
+    def __eq__(self, other):
+        return isinstance(other, TreeSpec) and hash(self) == hash(other)
+
+    @property
+    def num_nodes(self) -> int:
+        return n_nodes(self.max_depth)
+
+    def const_table(self) -> jnp.ndarray:
+        # Karoo-style integer constant terminals, symmetric around zero.
+        half = self.n_consts // 2
+        return jnp.asarray(
+            np.concatenate([np.arange(1, half + 1), -np.arange(1, self.n_consts - half + 1)]).astype(np.float32)
+        )
+
+
+# --- random draws ------------------------------------------------------------
+
+
+def _draw_terminal(key, shape, spec: TreeSpec):
+    """Random terminal (op, arg) arrays of `shape`."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    is_const = jax.random.bernoulli(k1, spec.p_const, shape)
+    op = jnp.where(is_const, prim.CONST, prim.FEATURE)
+    feat = jax.random.randint(k2, shape, 0, spec.n_features)
+    cons = jax.random.randint(k3, shape, 0, spec.n_consts)
+    return op.astype(jnp.int32), jnp.where(is_const, cons, feat).astype(jnp.int32)
+
+
+def _draw_function(key, shape, spec: TreeSpec, binary_only: bool = False):
+    """Random function opcode drawn from the spec's function set."""
+    ops = spec.fn_set.binary_opcodes if binary_only else np.asarray(spec.fn_set.opcodes)
+    idx = jax.random.randint(key, shape, 0, len(ops))
+    return jnp.asarray(ops)[idx].astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("spec", "pop"))
+def generate_population(key, pop: int, spec: TreeSpec):
+    """Ramped half-and-half initial population (Karoo's `(r)amped` type).
+
+    Trees are assigned a ramp depth in [1, max_depth] and a method
+    (full | grow), then generated top-down level by level, vectorized
+    over [pop, level_width]. Returns (op, arg): int32[pop, NODES].
+    """
+    N = spec.num_nodes
+    D = spec.max_depth
+    kd, km, kt = jax.random.split(key, 3)
+    ramp_depth = jax.random.randint(kd, (pop,), 1, D + 1)  # per-tree depth ceiling
+    full = jax.random.bernoulli(km, 0.5, (pop,))  # full vs grow
+
+    op = jnp.zeros((pop, N), jnp.int32)
+    arg = jnp.zeros((pop, N), jnp.int32)
+    active = jnp.zeros((pop, N), jnp.bool_).at[:, 0].set(True)
+
+    DEPTH = jnp.asarray(depth_table(N))
+    keys = jax.random.split(kt, D + 1)
+    for d in range(D + 1):
+        lo, w = 2**d - 1, 2**d
+        kf, kg, kterm, kchoice = jax.random.split(keys[d], 4)
+        at_ceiling = (d >= ramp_depth)[:, None]  # [pop, 1]
+        # choose: function or terminal for the active slots at this level
+        want_fn = jnp.where(
+            full[:, None], ~at_ceiling,
+            ~at_ceiling & jax.random.bernoulli(kg, spec.grow_p_fn, (pop, w)),
+        )
+        # Karoo's min 3 nodes: root of any depth>=1 tree is a function.
+        if d == 0:
+            want_fn = jnp.ones_like(want_fn)
+        fn_op = _draw_function(kf, (pop, w), spec, binary_only=(d == 0))
+        t_op, t_arg = _draw_terminal(kterm, (pop, w), spec)
+        lvl_active = active[:, lo:lo + w]
+        lvl_op = jnp.where(want_fn, fn_op, t_op)
+        lvl_arg = jnp.where(want_fn, jnp.zeros_like(t_arg), t_arg)
+        lvl_op = jnp.where(lvl_active, lvl_op, prim.EMPTY)
+        lvl_arg = jnp.where(lvl_active, lvl_arg, 0)
+        op = jax.lax.dynamic_update_slice(op, lvl_op, (0, lo))
+        arg = jax.lax.dynamic_update_slice(arg, lvl_arg, (0, lo))
+        # activate children
+        if d < D:
+            arity = jnp.asarray(prim.ARITY)[lvl_op]
+            l_act = lvl_active & (arity >= 1)
+            r_act = lvl_active & (arity == 2)
+            child = jnp.stack([l_act, r_act], axis=-1).reshape(pop, 2 * w)
+            active = jax.lax.dynamic_update_slice(active, child, (0, 2 * w - 1))
+    return op, arg
+
+
+# --- host-side pretty printing (archive/display, like fx_display_) ----------
+
+
+def to_string(op_row, arg_row, feature_names=None, const_table=None, idx: int = 0) -> str:
+    """Render one heap tree as an infix expression string (host-side)."""
+    op_row = np.asarray(op_row)
+    arg_row = np.asarray(arg_row)
+    o = int(op_row[idx])
+    if o == prim.EMPTY:
+        return "∅"
+    if o == prim.CONST:
+        c = float(const_table[arg_row[idx]]) if const_table is not None else arg_row[idx]
+        return f"{c:g}" if isinstance(c, float) else f"c{arg_row[idx]}"
+    if o == prim.FEATURE:
+        return feature_names[arg_row[idx]] if feature_names else f"x{arg_row[idx]}"
+    p = prim.FUNCTIONS[o - 3]
+    lhs = to_string(op_row, arg_row, feature_names, const_table, 2 * idx + 1)
+    if p.arity == 1:
+        return f"{p.name}({lhs})"
+    rhs = to_string(op_row, arg_row, feature_names, const_table, 2 * idx + 2)
+    sym = {"add": "+", "sub": "-", "mul": "*", "div": "/"}.get(p.name)
+    return f"({lhs} {sym} {rhs})" if sym else f"{p.name}({lhs}, {rhs})"
+
+
+def tree_sizes(op) -> jnp.ndarray:
+    """Number of non-EMPTY nodes per tree."""
+    return (op != prim.EMPTY).sum(-1)
+
+
+def check_invariants(op: np.ndarray, spec: TreeSpec) -> None:
+    """Assert well-formedness I1–I4 (host-side, used by tests)."""
+    op = np.asarray(op)
+    N = spec.num_nodes
+    depth = depth_table(N)
+    arity = prim.ARITY[op]
+    assert (op[:, 0] != prim.EMPTY).all(), "I1: empty root"
+    for i in range((N - 1) // 2):
+        l, r = op[:, 2 * i + 1], op[:, 2 * i + 2]
+        a = arity[:, i]
+        assert ((a < 1) | (l != prim.EMPTY)).all(), f"I2: missing left child of {i}"
+        assert ((a < 2) | (r != prim.EMPTY)).all(), f"I2: missing right child of {i}"
+        assert ((a == 2) | (r == prim.EMPTY)).all(), f"I2/I3: stray right child of {i}"
+        assert ((a >= 1) | (l == prim.EMPTY)).all(), f"I3: stray left child of {i}"
+    leaf = depth == spec.max_depth
+    assert (prim.ARITY[op[:, leaf]] == 0).all(), "I4: function at max depth"

@@ -1,0 +1,3 @@
+"""Datasets (paper's four + synthetic LM token streams) and sharded loaders."""
+from repro.data.datasets import iris, kat7, kepler, ligo_glitch  # noqa: F401
+from repro.data.loader import feature_major, lm_batches, shard_dataset  # noqa: F401

@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: fused GP population evaluation + fitness reduction.
+
+This is the compute hot spot the paper optimizes (§2.5: "the evaluation of
+the multivariate expression derived from each GP tree against the entire
+training dataset"). The pure-jnp path (kernels/ref.py → core/eval.py)
+materializes a [pop, nodes, data] intermediate in HBM between the
+level-sweep and the fitness reduction; this kernel keeps the whole
+evaluation frontier in VMEM per (population-tile × data-tile) block and
+writes back only the [pop] fitness partials — turning a memory-bound
+HBM-streaming computation into a VMEM-resident one.
+
+TPU adaptation of the terminal lookup (DESIGN.md §2): arbitrary-index
+gathers are the one primitive that does not lower cleanly to Mosaic, so
+feature selection is expressed two ways:
+
+  gather="onehot"  one-hot(arg) @ X — an MXU matmul. Guaranteed lowering,
+                   and for small feature counts the F-fold FLOP blowup is
+                   cheaper than a VPU gather round-trip.
+  gather="vmem"    jnp.take on the VMEM-resident X tile (sublane-dim
+                   dynamic gather; supported by recent Mosaic, and by
+                   interpret mode used for validation on CPU).
+
+ops.py picks per-call based on feature count and exposes the choice as a
+§Perf hillclimbing axis.
+
+Grid: (pop_tiles, data_tiles); the data dimension is innermost so each
+population tile's output block stays resident while fitness partials
+accumulate across data tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import primitives as prim
+
+_FN_BASE = 3
+
+
+def _apply_function_inline(op, lhs, rhs, fn_codes=None):
+    """Branch-free opcode dispatch (same contract as primitives.apply_function,
+    restated here so the kernel body has no module-level closure surprises).
+    fn_codes restricts the select chain to the run's operator set."""
+    codes = (list(fn_codes) if fn_codes is not None
+             else list(range(_FN_BASE, _FN_BASE + len(prim.FUNCTIONS))))
+    branches = [prim.FUNCTIONS[c - _FN_BASE].fn(lhs, rhs) for c in codes]
+    preds = [op == c for c in codes]
+    return jnp.select(preds, branches, jnp.zeros_like(lhs))
+
+
+def _eval_fitness_kernel(op_ref, arg_ref, x_ref, y_ref, w_ref, const_ref, out_ref,
+                         *, max_depth: int, n_features: int, n_consts: int,
+                         kernel: str, n_classes: int, precision: float, gather: str,
+                         fn_codes=None):
+    """One (pop_tile, data_tile) block: evaluate + reduce fitness partial."""
+    j = pl.program_id(1)
+    ops = op_ref[...]  # int32[Pb, N]
+    args = arg_ref[...]  # int32[Pb, N]
+    X = x_ref[...]  # f32[F, Db]
+    Pb, N = ops.shape
+    Db = X.shape[1]
+
+    # ---- terminal values for every slot ------------------------------------
+    if gather == "onehot":
+        # MXU path: feature select as one-hot matmul, [Pb*N, F] @ [F, Db].
+        f_iota = jax.lax.broadcasted_iota(jnp.int32, (Pb, N, n_features), 2)
+        onehot = (f_iota == args[:, :, None]).astype(jnp.float32)
+        feat = jax.lax.dot_general(
+            onehot.reshape(Pb * N, n_features), X,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(Pb, N, Db)
+    else:
+        # VMEM gather path: dynamic row-select from the resident data tile.
+        feat = jnp.take(X, jnp.clip(args, 0, n_features - 1), axis=0)  # [Pb, N, Db]
+
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (Pb, N, n_consts), 2)
+    c_onehot = (c_iota == args[:, :, None]).astype(jnp.float32)
+    cons = jnp.einsum("pnc,c->pn", c_onehot, const_ref[...])  # [Pb, N]
+
+    term = jnp.where((ops == prim.FEATURE)[:, :, None], feat,
+                     jnp.broadcast_to(cons[:, :, None], (Pb, N, Db)))
+
+    # ---- level-synchronous sweep, frontier resident in VMEM ----------------
+    vals = None  # child-level buffer [Pb, 2**(d+1), Db]
+    for d in range(max_depth, -1, -1):
+        lo, w = 2**d - 1, 2**d
+        opd = ops[:, lo:lo + w, None]
+        node = term[:, lo:lo + w]
+        if vals is not None:
+            pair = vals.reshape(Pb, w, 2, Db)
+            fn = _apply_function_inline(opd, pair[:, :, 0], pair[:, :, 1], fn_codes)
+            node = jnp.where(opd >= _FN_BASE, fn, node)
+        vals = jnp.where(opd == prim.EMPTY, 0.0, node)
+    preds = vals[:, 0]  # [Pb, Db]
+
+    # ---- fused fitness partial (w masks out data padding) -------------------
+    y = y_ref[...]  # f32[Db]
+    wgt = w_ref[...]  # f32[Db]
+    if kernel == "r":
+        err = jnp.abs(preds - y[None, :])
+        err = jnp.where(wgt[None, :] > 0, err, 0.0)  # mask BEFORE inf-sanitize
+        err = jnp.where(jnp.isnan(err), jnp.inf, err)
+        partial = err.sum(-1)
+    elif kernel == "c":
+        lab = jnp.clip(jnp.round(preds), 0, n_classes - 1)
+        partial = -((lab == y[None, :]) * wgt[None, :]).sum(-1)
+    elif kernel == "m":
+        partial = -((jnp.abs(preds - y[None, :]) <= precision) * wgt[None, :]).sum(-1)
+    else:
+        raise ValueError(kernel)
+
+    # accumulate across data tiles (innermost grid dim revisits out block)
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
+                        kernel: str = "r", n_classes: int = 3, precision: float = 1e-4,
+                        gather: str = "onehot", pop_tile: int = 8, data_tile: int = 1024,
+                        interpret: bool | None = None, fn_codes=None):
+    """Fused eval+fitness over pre-padded inputs.
+
+    op, arg:  int32[P, N]   P % pop_tile == 0
+    X:        f32[F, D]     D % data_tile == 0
+    y, weight f32[D]        weight is 1.0 on valid points, 0.0 on padding
+    returns   f32[P] fitness partial-sum (minimize)
+    """
+    P, N = op.shape
+    F, D = X.shape
+    assert P % pop_tile == 0 and D % data_tile == 0, (P, D, pop_tile, data_tile)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (P // pop_tile, D // data_tile)
+    body = functools.partial(
+        _eval_fitness_kernel, max_depth=max_depth, n_features=F,
+        n_consts=const_table.shape[0], kernel=kernel, n_classes=n_classes,
+        precision=precision, gather=gather, fn_codes=fn_codes)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pop_tile, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((pop_tile, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((F, data_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((const_table.shape[0],), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((pop_tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
+        interpret=interpret,
+    )(op, arg, X.astype(jnp.float32), y.astype(jnp.float32),
+      weight.astype(jnp.float32), const_table.astype(jnp.float32))

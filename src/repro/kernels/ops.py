@@ -1,0 +1,78 @@
+"""Jitted public wrapper for the GP eval+fitness kernel.
+
+Handles padding (population to pop_tile, data to data_tile with a zero
+weight mask), picks the terminal-gather strategy, and sizes the data tile
+to a VMEM budget. `impl="jnp"` falls through to the oracle so callers
+(engine, benchmarks) can flip implementations with one flag.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fitness import FitnessSpec
+from repro.core.trees import TreeSpec
+from repro.kernels import ref as _ref
+from repro.kernels.gp_eval import eval_fitness_pallas
+
+_VMEM_BUDGET = 12 * 2**20  # bytes; leave headroom under ~16 MB/core
+
+
+def pick_tiles(n_features: int, n_nodes: int, pop: int, data: int,
+               pop_tile: int = 8, data_tile: int = 1024, gather: str | None = None):
+    """Choose (pop_tile, data_tile, gather) under the VMEM budget.
+
+    VMEM per block ≈ X tile + term/vals buffers (+ onehot when used):
+        X:      F · Db · 4
+        term:   Pb · N · Db · 4     (dominant)
+        vals:   ≤ Pb · (N+1) · Db · 4
+        onehot: Pb · N · F · 4
+    """
+    if gather is None:
+        gather = "onehot" if n_features <= 64 else "vmem"
+    Db = data_tile
+
+    def vmem(Db):
+        base = 4 * (n_features * Db + 2 * pop_tile * (n_nodes + 1) * Db)
+        if gather == "onehot":
+            base += 4 * pop_tile * n_nodes * n_features
+        return base
+
+    while Db > 128 and vmem(Db) > _VMEM_BUDGET:
+        Db //= 2
+    return pop_tile, Db, gather
+
+
+@partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
+                                   "gather", "impl", "interpret"))
+def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
+            *, data_tile: int = 1024, pop_tile: int = 8, gather: str | None = None,
+            impl: str = "pallas", interpret: bool | None = None):
+    """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D])."""
+    if impl == "jnp":
+        return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec)
+
+    P, N = op.shape
+    F, D = X.shape
+    pop_tile, data_tile, gather = pick_tiles(F, N, P, D, pop_tile, data_tile, gather)
+
+    pad_p = (-P) % pop_tile
+    pad_d = (-D) % data_tile
+    weight = jnp.ones((D,), jnp.float32)
+    if pad_p:
+        op = jnp.pad(op, ((0, pad_p), (0, 0)))
+        arg = jnp.pad(arg, ((0, pad_p), (0, 0)))
+    if pad_d:
+        X = jnp.pad(X, ((0, 0), (0, pad_d)))
+        y = jnp.pad(y, (0, pad_d))
+        weight = jnp.pad(weight, (0, pad_d))
+
+    out = eval_fitness_pallas(
+        op, arg, X, y, weight, const_table, max_depth=tree_spec.max_depth,
+        kernel=fit_spec.kernel, n_classes=fit_spec.n_classes,
+        precision=fit_spec.precision, gather=gather, pop_tile=pop_tile,
+        data_tile=data_tile, interpret=interpret,
+        fn_codes=tuple(int(c) for c in tree_spec.fn_set.opcodes))
+    return out[:P]

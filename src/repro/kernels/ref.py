@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the fused GP eval+fitness kernel.
+
+Numerically identical contract to kernels/ops.fitness (same padding/
+weighting semantics) but built from the reference evaluator — the HBM-
+streaming path the kernel is measured against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.eval import evaluate_population
+from repro.core.fitness import FitnessSpec
+from repro.core.trees import TreeSpec
+
+
+def fitness_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
+                weight=None):
+    """f32[P] fitness (minimize); weight masks out padded data points."""
+    preds = evaluate_population(op, arg, X, const_table, tree_spec)  # [P, D]
+    y = y.astype(jnp.float32)
+    w = jnp.ones_like(y) if weight is None else weight.astype(jnp.float32)
+    if fit_spec.kernel == "r":
+        err = jnp.abs(preds - y[None, :])
+        err = jnp.where(w[None, :] > 0, err, 0.0)  # mask BEFORE inf-sanitize
+        err = jnp.where(jnp.isnan(err), jnp.inf, err)
+        return err.sum(-1)
+    if fit_spec.kernel == "c":
+        lab = jnp.clip(jnp.round(preds), 0, fit_spec.n_classes - 1)
+        return -((lab == y[None, :]) * w[None, :]).sum(-1)
+    if fit_spec.kernel == "m":
+        return -((jnp.abs(preds - y[None, :]) <= fit_spec.precision) * w[None, :]).sum(-1)
+    raise ValueError(fit_spec.kernel)
+
+
+def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
+                      fit_spec: FitnessSpec, tile: int = 65536):
+    """Same contract, but scans the data dimension in tiles so the
+    [pop, nodes, data] evaluation buffer never exceeds one tile — the jnp
+    analogue of the Pallas kernel's VMEM tiling (the fitness kernels are
+    all sum-decomposable over data)."""
+    import jax
+
+    D = X.shape[1]
+    if D <= tile:
+        return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec)
+    pad = (-D) % tile
+    w = jnp.ones((D,), jnp.float32)
+    if pad:
+        X = jnp.pad(X, ((0, 0), (0, pad)))
+        y = jnp.pad(y, (0, pad))
+        w = jnp.pad(w, (0, pad))
+    n = (D + pad) // tile
+    Xs = X.reshape(X.shape[0], n, tile).transpose(1, 0, 2)
+    ys = y.reshape(n, tile)
+    ws = w.reshape(n, tile)
+
+    def body(acc, inp):
+        Xt, yt, wt = inp
+        return acc + fitness_ref(op, arg, Xt, yt, const_table, tree_spec, fit_spec,
+                                 weight=wt), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((op.shape[0],), jnp.float32),
+                          (Xs, ys, ws))
+    return out

@@ -1,0 +1,195 @@
+"""Parameter / state / batch sharding rules (FSDP × TP).
+
+Every model in the zoo follows one set of path-based rules:
+
+  * tensor-parallel (`model` axis): attention heads, FFN hidden, experts
+    (or per-expert ff when E doesn't divide the axis), vocab.
+  * FSDP (`data` (+`pod`) axes): the other large dim of every matrix —
+    params, master copies and optimizer moments all shard over the full
+    mesh, which is what lets 123B/398B configs fit 16 GB/chip (the
+    dry-run's memory_analysis is the check). XLA inserts the per-layer
+    all-gather inside the scan-over-groups loop (ZeRO-3 style) and its
+    latency-hiding scheduler overlaps it with the previous group's
+    compute.
+
+Activation shardings come from ShardingPolicy constraints inside the
+model code; everything else is propagated by SPMD.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import ArchConfig
+
+_TP = "model"
+
+
+def _fsdp(policy) -> tuple:
+    return tuple(policy.batch)  # ("data",) or ("pod", "data")
+
+
+def _axis_sizes(mesh) -> dict:
+    return {name: int(size) for name, size in zip(mesh.axis_names, mesh.devices.shape)}
+
+
+def _fit(shape, lead, candidates, sizes) -> P:
+    """First candidate whose named axes evenly divide the dims they shard.
+    NamedSharding rejects uneven tiling, so e.g. gemma's kv=1 falls back
+    from head-sharding to head-dim-sharding to replication."""
+    for cand in candidates:
+        ok = True
+        for dim, ax in zip(shape[len(lead):], cand):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            if dim % n:
+                ok = False
+                break
+        if ok:
+            return P(*lead, *cand)
+    return P(*lead, *([None] * (len(shape) - len(lead))))
+
+
+def spec_for_param(cfg: ArchConfig, path: tuple, shape: tuple, sizes: dict) -> P:
+    """PartitionSpec for one parameter leaf, by path name. Candidates are
+    ordered best-first; divisibility picks the first legal one."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    fs = _fsdp(cfg.policy)
+    stacked = any(n in ("stack", "enc_stack") for n in names)
+    lead = (None,) if stacked else ()
+
+    def fit(*cands):
+        return _fit(shape, lead, cands, sizes)
+
+    if leaf == "embed":
+        return _fit(shape, (), [(_TP, fs), (None, fs), (None, None)], sizes)
+    if leaf == "unembed":
+        return _fit(shape, (), [(fs, _TP), (fs, None), (None, None)], sizes)
+    if leaf in ("wq", "wk", "wv"):
+        # never shard d_head: rope splits it in half and SPMD then falls back
+        # to full rematerialization (replicate+repartition) on every layer
+        return fit((fs, _TP, None), (fs, None, None), (None,) * 3)
+    if leaf == "wo":
+        return fit((_TP, None, fs), (None, None, fs), (None,) * 3)
+    if leaf in ("bq", "bk", "bv"):
+        return fit((_TP, None), (None, None))
+    if leaf in ("w_up", "w_gate", "w_down"):
+        if len(shape) - len(lead) == 3:  # MoE expert stacks [E, ., .]
+            if leaf == "w_down":  # [E, ff, d]
+                return fit((_TP, None, fs), (None, _TP, fs), (None, None, fs))
+            return fit((_TP, fs, None), (None, fs, _TP), (None, fs, None))
+        if leaf == "w_down":  # [ff, d]
+            return fit((_TP, fs), (None, fs), (None, None))
+        return fit((fs, _TP), (fs, None), (None, None))
+    if leaf == "router":
+        return fit((None, None))
+    if leaf == "in_proj":
+        return fit((fs, _TP), (fs, None), (None, None))
+    if leaf == "out_proj":
+        return fit((_TP, fs), (None, fs), (None, None))
+    if leaf == "conv_w":
+        return fit((None, _TP), (None, None))
+    if leaf == "conv_b":
+        return fit((_TP,), (None,))
+    # norms, scalars (A_log, D, dt_bias), biases → replicated
+    return P(*lead, *([None] * (len(shape) - len(lead))))
+
+
+def param_specs(cfg: ArchConfig, param_shapes, mesh) -> Any:
+    sizes = _axis_sizes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(cfg, path, leaf.shape, sizes), param_shapes)
+
+
+def _opt_specs(cfg: ArchConfig, pspecs, opt_shapes) -> Any:
+    """Mirror param specs onto optimizer slots (AdamW m/v: same shape;
+    Adafactor r/c: param spec minus the averaged dim)."""
+
+    def mirror(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        # strip the optimizer container prefix ("m"/"v"/"stats") and the
+        # factored suffix ("r"/"c"/"v") to locate the param path
+        core = [n for n in names if n not in ("m", "v", "stats", "r", "c")]
+        suffix = names[-1] if names[-1] in ("r", "c", "v") else None
+        node = pspecs
+        try:
+            for n in core:
+                node = node[n]
+        except (KeyError, TypeError):
+            return P(*([None] * len(leaf.shape)))
+        if not isinstance(node, P):
+            return P(*([None] * len(leaf.shape)))
+        if len(node) == len(leaf.shape):
+            return node
+        if suffix == "r":  # param spec minus last dim
+            return P(*node[:-1])
+        if suffix == "c":  # param spec minus second-to-last dim
+            return P(*node[:-2], node[-1])
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(mirror, opt_shapes)
+
+
+def train_state_specs(cfg: ArchConfig, state_shapes, mesh) -> Any:
+    pspecs = param_specs(cfg, state_shapes["params"], mesh)
+    return {"params": pspecs,
+            "opt": _opt_specs(cfg, pspecs, state_shapes["opt"]),
+            "step": P()}
+
+
+def batch_specs(cfg: ArchConfig, batch_shapes) -> Any:
+    b = tuple(cfg.policy.batch)
+    return jax.tree.map(lambda leaf: P(b, *([None] * (len(leaf.shape) - 1))),
+                        batch_shapes)
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes, mesh, *, seq_shard: bool) -> Any:
+    """KV/SSM cache sharding. Normal decode: batch over data, kv-heads/ssm
+    heads over model. long-context (batch=1): sequence over data
+    (context parallelism) — the flash-merge optimization in
+    launch/serving.py consumes the same layout."""
+    b = tuple(cfg.policy.batch)
+    sizes = _axis_sizes(mesh)
+    bb = None if seq_shard else b
+    sq = b if seq_shard else None
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        leafname = names[-1]
+        lead = (None,)
+        if leafname in ("k", "v"):  # [G, B, S, KV, hd]
+            return _fit(leaf.shape, lead,
+                        [(bb, sq, _TP, None), (bb, sq, None, _TP), (bb, sq, None, None)],
+                        sizes)
+        if leafname in ("ck", "cv"):  # [G, B, M, KV, hd]
+            return _fit(leaf.shape, lead,
+                        [(bb, None, _TP, None), (bb, None, None, _TP),
+                         (bb, None, None, None)], sizes)
+        if leafname == "ssm":  # [G, B, H, N, P]
+            return _fit(leaf.shape, lead,
+                        [(bb, _TP, None, None), (None, _TP, None, None),
+                         (None, None, None, None)], sizes)
+        if leafname == "conv":  # [G, B, K-1, conv_dim]
+            return _fit(leaf.shape, lead,
+                        [(bb, None, _TP), (None, None, _TP), (None, None, None)],
+                        sizes)
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def named(mesh, spec_tree, shape_tree):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (for .lower())."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                               sharding=NamedSharding(mesh, spec)),
+        shape_tree, spec_tree)

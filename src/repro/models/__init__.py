@@ -1,0 +1,7 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers, pjit-sharded).
+
+The paper's GP technique is orthogonal to these architectures (DESIGN.md
+§5); they exercise the framework's distribution substrate and provide the
+40 dry-run/roofline cells.
+"""
+from repro.models.model import build_model, input_specs, make_serve_step, make_train_step  # noqa: F401

@@ -1,0 +1,324 @@
+"""Shared neural layers: norms, RoPE, chunked (flash-style) attention, MLPs.
+
+Everything is functional — params are plain dicts of arrays — and every
+op is expressed so XLA's SPMD partitioner can shard it from the pjit
+in_shardings alone. Attention never materializes an [S, S] score matrix:
+training/prefill use a q-chunk × kv-chunk double `lax.scan` with running
+max/denominator (memory-efficient "flash" contraction in pure JAX — the
+TPU-native replacement for a CUDA flash kernel, DESIGN.md §2), and decode
+does a single-token pass that supports a sequence-sharded KV cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# initializers / norms
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axes=(0,), dtype=jnp.float32):
+    fan_in = max(int(np.prod([shape[a] for a in in_axes])), 1)
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+def rms_norm(x, scale, *, eps: float = 1e-6, plus_one: bool = False):
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    s = (1.0 + scale) if plus_one else scale
+    return (x32 * inv).astype(x.dtype) * s.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope(x, positions, *, theta: float = 10000.0):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# chunked causal/full attention (training & prefill)
+# --------------------------------------------------------------------------
+
+
+def _chunk_attend(q, k, v, mask, scale):
+    """q:[B,Hq,Lq,hd] k,v:[B,Hkv,Lk,hd] mask:[Lq,Lk] bool|None.
+    Returns (o_unnormalized [B,Hq,Lq,hd] f32, m [B,Hq,Lq] f32, l [B,Hq,Lq] f32)."""
+    groups = q.shape[1] // k.shape[1]
+    kq = jnp.repeat(k, groups, axis=1)
+    vq = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kq, preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)  # may be -inf for fully-masked rows
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = p.sum(-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vq,
+                   preferred_element_type=jnp.float32)
+    return o, m_safe, l
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512, kv_chunk: int = 1024,
+                      positions_q=None, positions_k=None, policy=None):
+    """Memory-efficient attention. q:[B,S_q,Hq,hd] k,v:[B,S_k,Hkv,hd] →
+    [B,S_q,Hq,hd]. Never materializes more than [B,H,q_chunk,kv_chunk]."""
+    B, Sq0, Hq, hd = q.shape
+    Sk0 = k.shape[1]
+    q_chunk = min(q_chunk, Sq0)
+    kv_chunk = min(kv_chunk, Sk0)
+    # pad ragged lengths (e.g. whisper's 1500-frame memory) up to the tile;
+    # padded keys are masked out via sentinel positions, padded queries cut.
+    pad_q = (-Sq0) % q_chunk
+    pad_k = (-Sk0) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = Sq0 + pad_q, Sk0 + pad_k
+    kv_valid = jnp.arange(Sk) < Sk0
+    scale = 1.0 / math.sqrt(hd)
+    # [B,S,H,d] -> [B,H,S,d] once, chunk on S
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qs = qT.reshape(B, Hq, nq, q_chunk, hd).transpose(2, 0, 1, 3, 4)  # [nq,B,H,qc,hd]
+    ks = kT.reshape(B, kT.shape[1], nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    vs = vT.reshape(B, vT.shape[1], nk, kv_chunk, hd).transpose(2, 0, 1, 3, 4)
+    if policy is not None:
+        # pin the chunk-scan xs layout: heads on the model axis. Left to
+        # itself GSPMD shards the loop-invariant K/V stacks on d_head, which
+        # makes every score dot a partial sum + [B,H,qc,kc] all-reduce over
+        # the model axis — tens of TB per 32k prefill (§Perf iteration 2).
+        from jax.sharding import PartitionSpec as _P
+
+        def pin(t, *, allow_row_shard=False):
+            if t.shape[2] % policy.tp_size == 0:
+                return jax.lax.with_sharding_constraint(
+                    t, _P(None, policy.batch, policy.model, None, None))
+            if allow_row_shard and t.shape[3] % policy.tp_size == 0:
+                # heads don't divide the axis (qwen's 40H, gemma's 8H):
+                # shard the q-chunk ROWS instead — each rank attends 1/tp
+                # of the queries against full (replicated) KV, recovering
+                # model-axis parallelism without touching the arch
+                return jax.lax.with_sharding_constraint(
+                    t, _P(None, policy.batch, None, policy.model, None))
+            return jax.lax.with_sharding_constraint(
+                t, _P(None, policy.batch, None, None, None))
+
+        qs = pin(qs, allow_row_shard=True)
+        ks, vs = pin(ks), pin(vs)
+
+    pos_q = positions_q if positions_q is not None else jnp.arange(Sq)
+    pos_k = positions_k if positions_k is not None else jnp.arange(Sk)
+    if positions_q is not None and pad_q:
+        pos_q = jnp.pad(pos_q, (0, pad_q))
+    if positions_k is not None and pad_k:
+        pos_k = jnp.pad(pos_k, (0, pad_k))
+
+    def q_body(_, qi_and_idx):
+        qi, iq = qi_and_idx
+
+        # checkpoint: backward recomputes the [qc, kc] score block instead of
+        # saving it — the whole point of flash-style chunking (otherwise the
+        # scan's saved residuals reconstitute the full [S,S] matrix in HBM).
+        @jax.checkpoint
+        def kv_body(carry, kv_and_idx):
+            o_acc, m_acc, l_acc = carry
+            (ki, vi), ik = kv_and_idx
+            vk = jax.lax.dynamic_slice_in_dim(kv_valid, ik * kv_chunk, kv_chunk)
+            if causal:
+                mq = jax.lax.dynamic_slice_in_dim(pos_q, iq * q_chunk, q_chunk)
+                mk = jax.lax.dynamic_slice_in_dim(pos_k, ik * kv_chunk, kv_chunk)
+                mask = (mq[:, None] >= mk[None, :]) & vk[None, :]
+            elif pad_k:
+                mask = jnp.broadcast_to(vk[None, :], (q_chunk, kv_chunk))
+            else:
+                mask = None
+            o, m, l = _chunk_attend(qi, ki, vi, mask, scale)
+            m_new = jnp.maximum(m_acc, m)
+            c_old = jnp.exp(m_acc - m_new)
+            c_new = jnp.exp(m - m_new)
+            o_acc = o_acc * c_old[..., None] + o * c_new[..., None]
+            l_acc = l_acc * c_old + l * c_new
+            return (o_acc, m_new, l_acc), None
+
+        o0 = jnp.zeros(qi.shape, jnp.float32)
+        m0 = jnp.full(qi.shape[:-1], -1e30, jnp.float32)
+        l0 = jnp.zeros(qi.shape[:-1], jnp.float32)
+        (o, m, l), _ = jax.lax.scan(kv_body, (o0, m0, l0),
+                                    ((ks, vs), jnp.arange(nk)))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))  # [nq,B,H,qc,hd]
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, Hq, Sq, hd)
+    return out.transpose(0, 2, 1, 3)[:, :Sq0]
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (params + apply for train/prefill/decode)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+
+
+def attn_init(key, dims: AttnDims, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (dims.d_model, dims.n_heads, dims.d_head), (0,), dtype),
+        "wk": dense_init(ks[1], (dims.d_model, dims.n_kv, dims.d_head), (0,), dtype),
+        "wv": dense_init(ks[2], (dims.d_model, dims.n_kv, dims.d_head), (0,), dtype),
+        "wo": dense_init(ks[3], (dims.n_heads, dims.d_head, dims.d_model), (0, 1), dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((dims.n_heads, dims.d_head), dtype)
+        p["bk"] = jnp.zeros((dims.n_kv, dims.d_head), dtype)
+        p["bv"] = jnp.zeros((dims.n_kv, dims.d_head), dtype)
+    return p
+
+
+def _qkv(p, x, dims: AttnDims, positions, *, use_rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if use_rope:
+        q = rope(q, positions, theta=dims.rope_theta)
+        k = rope(k, positions, theta=dims.rope_theta)
+    return q, k, v
+
+
+def replicate_kv(k, v, n_heads: int, n_kv: int, tp: int):
+    """Replicate KV heads up to the TP degree when they don't divide it.
+
+    With kv < tp-axis the kv heads can't shard; the in-chunk GQA repeat
+    then produces UNSHARDED score blocks and XLA all-reduces them — tens
+    of TB/step at 32k (§Perf iteration 2). Replicating kv→tp right after
+    projection keeps the repeat shard-aligned (same layout blocks as the
+    sharded q heads) at the standard cost of tp/kv× KV activation memory."""
+    if tp and n_heads % tp == 0 and n_kv < tp and tp % n_kv == 0 and n_heads % tp == 0:
+        r = tp // n_kv
+        k = jnp.repeat(k, r, axis=2)
+        v = jnp.repeat(v, r, axis=2)
+    return k, v
+
+
+def attn_apply(p, x, dims: AttnDims, *, causal=True, positions=None,
+               q_chunk=512, kv_chunk=1024, use_rope=True, policy=None):
+    """Training / prefill self-attention. x: [B, S, d]."""
+    B, S, _ = x.shape
+    tp = policy.tp_size if policy else 0
+    pos = positions if positions is not None else jnp.arange(S)
+    q, k, v = _qkv(p, x, dims, pos, use_rope=use_rope)
+    k, v = replicate_kv(k, v, dims.n_heads, dims.n_kv, tp)
+    o = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                          positions_q=pos, positions_k=pos, policy=policy)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_attn_apply(p, x, kv_cache_k, kv_cache_v, dims: AttnDims,
+                     q_chunk=512, kv_chunk=1024, policy=None):
+    """Cross attention to precomputed memory K/V: [B, S_kv, n_kv, hd]."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if dims.qkv_bias:
+        q = q + p["bq"]
+    o = chunked_attention(q, kv_cache_k, kv_cache_v, causal=False,
+                          q_chunk=q_chunk, kv_chunk=kv_chunk, policy=policy)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def cross_kv(p, mem, dims: AttnDims):
+    """Precompute cross-attention K/V from encoder/image memory [B, S, d]."""
+    k = jnp.einsum("bsd,dhk->bshk", mem, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mem, p["wv"])
+    if dims.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v
+
+
+def attn_decode(p, x, cache_k, cache_v, cur_len, dims: AttnDims, *, use_rope=True):
+    """Single-token decode. x:[B,1,d]; cache:[B,S_max,n_kv,hd] (may be
+    sequence-sharded by the caller). Returns (out [B,1,d], new_k, new_v).
+
+    The softmax runs over the full cache with positions >= cur_len masked —
+    XLA partitions this cleanly when the cache is sharded on batch or heads;
+    serving.py provides the shard_map flash-merge variant for seq-sharded
+    caches (§Perf).
+    """
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    q, k, v = _qkv(p, x, dims, pos, use_rope=use_rope)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cur_len, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cur_len, axis=1)
+    groups = dims.n_heads // dims.n_kv
+    kq = jnp.repeat(new_k, groups, axis=2)
+    vq = jnp.repeat(new_v, groups, axis=2)
+    s = jnp.einsum("bshk,bthk->bhst", q, kq.astype(q.dtype),
+                   preferred_element_type=jnp.float32) / math.sqrt(dims.d_head)
+    valid = (jnp.arange(cache_k.shape[1]) <= cur_len)[None, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthk->bshk", w.astype(vq.dtype), vq,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), new_k, new_v
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, *, gated=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff), (0,), dtype),
+         "w_down": dense_init(ks[1], (d_ff, d_model), (0,), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), (0,), dtype)
+    return p
+
+
+def mlp_apply(p, x, *, act: str = "silu"):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = (jax.nn.gelu(g) if act == "gelu" else jax.nn.silu(g)) * up
+    else:
+        h = jax.nn.gelu(up) if act == "gelu" else jax.nn.silu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,350 @@
+"""ArchConfig + model assembly + step factories + dry-run input specs.
+
+`build_model(cfg)` returns a functional Model whose methods close over the
+config only — params/caches are explicit pytrees, so `jax.eval_shape` can
+drive the whole multi-pod dry-run without allocating a byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.layers import AttnDims
+from repro.models.ssm import SSMDims
+from repro.models.transformer import ShardingPolicy
+
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    gated_mlp: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    pos_embed: str = "rope"  # rope | sinusoidal
+    norm: str = "rms"  # rms | ln
+    norm_plus_one: bool = False
+    embed_scale: bool = False
+    tie_embeddings: bool = False
+    # moe
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    # ssm
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_groups: int = 1
+    ssm_chunk: int = 128
+    # structure: pattern repeated n_layers/len(pattern) times
+    pattern: tuple = (("attn", "dense"),)
+    enc_layers: int = 0  # whisper encoder depth
+    n_memory: int = 0  # cross-attn memory tokens (enc output / image patches)
+    # attention chunking
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # numerics / optimizer
+    compute_dtype: str = "bfloat16"
+    cache_dtype: str = "bfloat16"
+    optimizer: str = "adamw"  # adamw | adafactor
+    moe_capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    accum_steps: int = 1
+    # sharding (None → no constraints; launch/* installs a policy)
+    policy: ShardingPolicy | None = None
+    # shape-cell support (full attention archs skip long_500k)
+    subquadratic: bool = False
+
+    @property
+    def attn_dims(self) -> AttnDims:
+        return AttnDims(self.d_model, self.n_heads, self.n_kv, self.d_head,
+                        self.qkv_bias, self.rope_theta)
+
+    @property
+    def ssm_dims(self) -> SSMDims:
+        return SSMDims(self.d_model, self.ssm_state, self.ssm_headdim,
+                       self.ssm_groups, chunk=self.ssm_chunk)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.pattern) == 0, (self.n_layers, self.pattern)
+        return self.n_layers // len(self.pattern)
+
+    def with_policy(self, policy: ShardingPolicy | None) -> "ArchConfig":
+        return dataclasses.replace(self, policy=policy)
+
+    def param_count(self) -> int:
+        shapes = jax.eval_shape(lambda k: init_params(self, k), jax.random.PRNGKey(0))
+        return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of moe_experts)."""
+        total = self.param_count()
+        if not self.moe_experts:
+            return total
+        expert = 0
+        n_moe_layers = sum(1 for _, ml in self.pattern if ml == "moe") * self.n_groups
+        per = self.d_model * self.moe_d_ff * (3 if self.gated_mlp else 2)
+        expert = n_moe_layers * per
+        return total - expert * self.moe_experts + expert * self.moe_top_k
+
+
+# --------------------------------------------------------------------------
+# params / forward
+# --------------------------------------------------------------------------
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _sinusoidal(max_len, d, dtype):
+    pos = np.arange(max_len)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+def init_params(cfg: ArchConfig, key):
+    """Full parameter pytree (f32 master copies; cast to compute dtype in fwd)."""
+    ks = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "tok": T.embed_init(cfg, ks[0], jnp.float32),
+        "stack": T.stack_init(cfg, ks[1], cfg.pattern, cfg.n_groups, jnp.float32),
+        "final_norm": T._norm_init(cfg, jnp.float32),
+    }
+    if cfg.family == "encdec":
+        enc_pattern = (("attn_full", "dense"),)
+        params["enc_stack"] = T.stack_init(cfg, ks[2], enc_pattern, cfg.enc_layers,
+                                           jnp.float32)
+        params["enc_norm"] = T._norm_init(cfg, jnp.float32)
+    return params
+
+
+def _cast(params, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+
+
+def _encode_memory(cfg, params, batch):
+    """Cross-attention memory: whisper runs the encoder over (stubbed) frame
+    embeddings; VLM consumes (stubbed) patch embeddings directly."""
+    if cfg.family == "encdec":
+        mem = batch["frames"].astype(_dtype(cfg))
+        mem = mem + _sinusoidal(mem.shape[1], cfg.d_model, mem.dtype)[None]
+        mem, _ = T.stack_apply_train(cfg, _cast(params["enc_stack"], _dtype(cfg)), mem,
+                                     (("attn_full", "dense"),), causal=False)
+        return T._apply_norm(cfg, _cast(params["enc_norm"], _dtype(cfg)), mem)
+    if cfg.family == "vlm":
+        return batch["memory"].astype(_dtype(cfg))
+    return None
+
+
+def forward_train(cfg: ArchConfig, params, batch):
+    """batch: tokens [B,S], labels [B,S], mask [B,S] (+frames|memory)."""
+    dt = _dtype(cfg)
+    p = _cast(params, dt)
+    x = T.embed_tokens(cfg, p["tok"], batch["tokens"])
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(x.shape[1], cfg.d_model, x.dtype)[None]
+    if cfg.policy:
+        x = jax.lax.with_sharding_constraint(x, P(cfg.policy.batch, None, None))
+    memory = _encode_memory(cfg, p, batch)
+    x, aux = T.stack_apply_train(cfg, p["stack"], x, cfg.pattern, memory=memory)
+    x = T._apply_norm(cfg, p["final_norm"], x)
+    ce = T.chunked_ce_loss(cfg, p["tok"], x, batch["labels"], batch["mask"])
+    loss = ce + cfg.aux_loss_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serve: cache init / prefill / decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return T.stack_cache_init(cfg, cfg.pattern, cfg.n_groups, batch, max_len,
+                              jnp.dtype(cfg.cache_dtype))
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, cur_len):
+    """One token for every sequence. token: [B,1] int32; cur_len: [] int32.
+    Returns (logits [B,1,V], new_cache)."""
+    dt = _dtype(cfg)
+    p = _cast(params, dt)
+    x = T.embed_tokens(cfg, p["tok"], token)
+    if cfg.pos_embed == "sinusoidal":
+        pe = _sinusoidal(cache_max_len(cache), cfg.d_model, x.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, cur_len, 1)[None]
+    x, new_cache = T.stack_apply_decode(cfg, p["stack"], x, cache, cur_len, cfg.pattern)
+    x = T._apply_norm(cfg, p["final_norm"], x)
+    return T.logits_last(cfg, p["tok"], x), new_cache
+
+
+def cache_max_len(cache) -> int:
+    for k in cache:
+        if "k" in cache[k]:
+            return cache[k]["k"].shape[2]
+    return 1
+
+
+def prefill(cfg: ArchConfig, params, batch, max_len: int):
+    """Process the full prompt, build the cache, return last-token logits.
+
+    tokens: [B, S] → (logits [B,1,V], cache, cur_len=S).
+    """
+    dt = _dtype(cfg)
+    p = _cast(params, dt)
+    tokens = batch["tokens"]
+    B, Sq = tokens.shape
+    x = T.embed_tokens(cfg, p["tok"], tokens)
+    if cfg.pos_embed == "sinusoidal":
+        x = x + _sinusoidal(Sq, cfg.d_model, x.dtype)[None]
+    if cfg.policy:
+        x = jax.lax.with_sharding_constraint(x, P(cfg.policy.batch, None, None))
+    memory = _encode_memory(cfg, p, batch)
+    x, cache = T.stack_apply_prefill(cfg, p["stack"], x, cfg.pattern, max_len,
+                                     jnp.dtype(cfg.cache_dtype), memory=memory)
+    x = T._apply_norm(cfg, p["final_norm"], x)
+    logits = T.logits_last(cfg, p["tok"], x[:, -1:])
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# step factories
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, optimizer, param_specs=None) -> Callable:
+    """(train_state, batch) → (train_state, metrics). Optimizer from
+    repro.optim (init/update pair). Supports gradient accumulation.
+
+    `param_specs` (a pytree of PartitionSpec) pins the gradient layout to
+    the parameter layout — without it SPMD may replicate the stacked
+    [n_groups, ...] grad accumulators of the scan backward, which is a
+    >100 GB/device bug at 123B params."""
+
+    def loss_fn(params, batch):
+        return forward_train(cfg, params, batch)
+
+    def constrain(grads):
+        if param_specs is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, param_specs)
+
+    def train_step(state, batch):
+        params, opt_state, step = state["params"], state["opt"], state["step"]
+        if cfg.accum_steps > 1:
+            def micro(c, mb):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g = constrain(g)
+                return jax.tree.map(jnp.add, c, (g, l)), m
+            B = batch["tokens"].shape[0]
+            mb = jax.tree.map(
+                lambda a: a.reshape((cfg.accum_steps, B // cfg.accum_steps) + a.shape[1:]),
+                batch)
+            zero = (jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), params),
+                    jnp.zeros((), jnp.float32))
+            (grads, loss), ms = jax.lax.scan(micro, zero, mb)
+            grads = jax.tree.map(lambda g: g / cfg.accum_steps, grads)
+            loss = loss / cfg.accum_steps
+            metrics = jax.tree.map(lambda a: a.mean(), ms)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        grads = constrain(grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        new_state = {"params": new_params, "opt": new_opt, "step": step + 1}
+        metrics = {"loss": loss, **metrics,
+                   "grad_norm": jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                             for g in jax.tree.leaves(grads)))}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    def serve_step(params, cache, token, cur_len):
+        return decode_step(cfg, params, cache, token, cur_len)
+
+    return serve_step
+
+
+def build_model(cfg: ArchConfig):
+    """Bundle the functional API for one architecture."""
+    return {
+        "config": cfg,
+        "init_params": lambda key: init_params(cfg, key),
+        "forward_train": lambda p, b: forward_train(cfg, p, b),
+        "prefill": lambda p, b, m: prefill(cfg, p, b, m),
+        "decode_step": lambda p, c, t, l: decode_step(cfg, p, c, t, l),
+        "init_cache": lambda b, m: init_cache(cfg, b, m),
+    }
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, no allocation)
+# --------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_supported(cfg: ArchConfig, shape: str) -> bool:
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False  # full-attention archs skip (DESIGN.md §5)
+    return True
+
+
+def input_specs(cfg: ArchConfig, shape: str):
+    """ShapeDtypeStructs for every model input of a (arch × shape) cell.
+
+    Returns (kind, specs_dict). kind ∈ {train, prefill, decode} selects
+    which step function the dry-run lowers.
+    """
+    s = SHAPES[shape]
+    B, S = s["batch"], s["seq"]
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if s["kind"] == "train":
+        specs = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32),
+                 "mask": sds((B, S), f32)}
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["memory"] = sds((B, cfg.n_memory, cfg.d_model), jnp.bfloat16)
+        return "train", specs
+    if s["kind"] == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = sds((B, cfg.n_memory, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["memory"] = sds((B, cfg.n_memory, cfg.d_model), jnp.bfloat16)
+        return "prefill", specs
+    # decode: one new token against a seq_len cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S))
+    return "decode", {
+        "cache": cache,
+        "token": sds((B, 1), i32),
+        "cur_len": sds((), i32),
+    }

@@ -1,0 +1,340 @@
+"""Generic decoder stack: every assigned architecture is a layer *pattern*.
+
+A model is `n_groups` repetitions of a static pattern of blocks, e.g.
+
+    dense LM     : [("attn", "dense")]                       × n_layers
+    MoE LM       : [("attn", "moe")]                         × n_layers
+    Mamba-2      : [("mamba", "none")]                       × n_layers
+    Jamba (1:7)  : [(attn,dense), (mamba,moe), (mamba,dense), ...] × 9
+    Whisper dec  : [("attn", "dense", cross=True)]           × 24
+    Llama-Vision : [(cross,dense), (attn,dense) × 4]         × 20
+
+Group parameters are stacked on a leading [n_groups] axis and the stack
+runs under `lax.scan` with `jax.checkpoint` around the group body — the
+compiled HLO is O(pattern), not O(n_layers), which keeps the 88-layer /
+100-layer dry-runs compilable and gives the standard remat memory profile.
+
+Sharding is expressed only through `with_sharding_constraint` on a few
+canonical intermediates (residual stream, logits) plus the in_shardings
+on the stacked params (launch/sharding.py); XLA SPMD propagates the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+# --------------------------------------------------------------------------
+# sharding policy
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Mesh-axis names used in activation constraints. None = no constraints
+    (single-device smoke tests)."""
+
+    batch: tuple = ("data",)  # axes sharding the batch dim
+    model: str = "model"  # tensor-parallel axis
+    tp_size: int = 16  # size of the model axis (for divisibility rules)
+    dp_size: int = 16  # product of batch-axis sizes (for divisibility rules)
+    seq_shard_residual: bool = True  # Megatron-SP style residual layout
+    seq_axis_for_cache: str | None = None  # context-parallel KV/long-context
+
+    def __hash__(self):
+        return hash((self.batch, self.model, self.tp_size, self.dp_size,
+                     self.seq_shard_residual, self.seq_axis_for_cache))
+
+
+def _shard(x, cfg, spec):
+    if getattr(cfg, "policy", None) is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def _residual_spec(cfg, seq_sharded: bool):
+    pol = cfg.policy
+    if seq_sharded and pol.seq_shard_residual:
+        return (pol.batch, pol.model, None)
+    return (pol.batch, None, None)
+
+
+# --------------------------------------------------------------------------
+# block init / apply
+# --------------------------------------------------------------------------
+
+
+def _norm_init(cfg, dtype):
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((cfg.d_model,), dtype),
+                "bias": jnp.zeros((cfg.d_model,), dtype)}
+    init = jnp.zeros if cfg.norm_plus_one else jnp.ones
+    return {"scale": init((cfg.d_model,), dtype)}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "ln":
+        return L.layer_norm(x, p["scale"], p["bias"])
+    return L.rms_norm(x, p["scale"], plus_one=cfg.norm_plus_one)
+
+
+def block_init(cfg, key, mixer: str, mlp_kind: str, dtype):
+    k1, k2 = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": _norm_init(cfg, dtype)}
+    if mixer in ("attn", "attn_full", "cross"):
+        p["attn"] = L.attn_init(k1, cfg.attn_dims, dtype)
+    elif mixer == "mamba":
+        p["ssm"] = S.ssm_init(k1, cfg.ssm_dims, dtype)
+    else:
+        raise ValueError(mixer)
+    if mlp_kind == "dense":
+        p["norm2"] = _norm_init(cfg, dtype)
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, dtype=dtype)
+    elif mlp_kind == "moe":
+        p["norm2"] = _norm_init(cfg, dtype)
+        p["mlp"] = M.moe_init(k2, cfg.d_model, cfg.moe_d_ff, cfg.moe_experts,
+                              gated=cfg.gated_mlp, dtype=dtype)
+    elif mlp_kind != "none":
+        raise ValueError(mlp_kind)
+    return p
+
+
+def _apply_mlp(cfg, p, x, mlp_kind: str):
+    if mlp_kind == "none":
+        return x, 0.0
+    h = _apply_norm(cfg, p["norm2"], x)
+    if mlp_kind == "dense":
+        return x + L.mlp_apply(p["mlp"], h, act=cfg.act), 0.0
+    if M.sharded_path_ok(cfg.policy, h.shape, cfg.moe_experts):
+        # own remat boundary: without it the group-scan saves the shard_map
+        # internals (expert hiddens) as backward residuals — one [C,ff]
+        # buffer per MoE layer network-wide
+        moe_fn = jax.checkpoint(
+            lambda pp, hh: M.moe_apply_sharded(
+                pp, hh, top_k=cfg.moe_top_k, act=cfg.act,
+                capacity_factor=cfg.moe_capacity_factor, policy=cfg.policy))
+        y, aux = moe_fn(p["mlp"], h)
+    else:
+        y, aux = M.moe_apply(p["mlp"], h, top_k=cfg.moe_top_k, act=cfg.act,
+                             capacity_factor=cfg.moe_capacity_factor)
+    return x + y, aux
+
+
+def block_apply_train(cfg, p, x, mixer: str, mlp_kind: str, memory=None, causal=True):
+    """x: [B,S,d]; memory: [B,M,d] for cross blocks. Returns (x, aux_loss)."""
+    h = _apply_norm(cfg, p["norm1"], x)
+    if mixer in ("attn", "attn_full"):
+        h = _shard(h, cfg, (cfg.policy.batch, None, None)) if cfg.policy else h
+        o = L.attn_apply(p["attn"], h, cfg.attn_dims, causal=(mixer == "attn") and causal,
+                         q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk, policy=cfg.policy)
+        x = x + o
+    elif mixer == "cross":
+        ck, cv = L.cross_kv(p["attn"], memory, cfg.attn_dims)
+        x = x + L.cross_attn_apply(p["attn"], h, ck, cv, cfg.attn_dims,
+                                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                   policy=cfg.policy)
+    elif mixer == "mamba":
+        o, _, _ = S.ssm_apply(p["ssm"], h, cfg.ssm_dims, policy=cfg.policy)
+        x = x + o
+    x, aux = _apply_mlp(cfg, p, x, mlp_kind)
+    if cfg.policy:
+        x = _shard(x, cfg, _residual_spec(cfg, seq_sharded=True))
+    return x, aux
+
+
+def block_cache_init(cfg, mixer: str, batch: int, max_len: int, dtype):
+    d = cfg.attn_dims
+    if mixer in ("attn", "attn_full"):
+        shp = (batch, max_len, d.n_kv, d.d_head)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if mixer == "cross":
+        shp = (batch, cfg.n_memory, d.n_kv, d.d_head)
+        return {"ck": jnp.zeros(shp, dtype), "cv": jnp.zeros(shp, dtype)}
+    if mixer == "mamba":
+        sd = cfg.ssm_dims
+        return {"ssm": jnp.zeros((batch, sd.n_heads, sd.d_state, sd.headdim), jnp.float32),
+                "conv": jnp.zeros((batch, sd.d_conv - 1, sd.conv_dim), dtype)}
+    raise ValueError(mixer)
+
+
+def block_apply_decode(cfg, p, x, cache, cur_len, mixer: str, mlp_kind: str):
+    """x: [B,1,d]. Returns (x, new_cache)."""
+    h = _apply_norm(cfg, p["norm1"], x)
+    if mixer in ("attn", "attn_full"):
+        o, nk, nv = L.attn_decode(p["attn"], h, cache["k"], cache["v"], cur_len,
+                                  cfg.attn_dims)
+        x, cache = x + o, {"k": nk, "v": nv}
+    elif mixer == "cross":
+        x = x + L.cross_attn_apply(p["attn"], h, cache["ck"], cache["cv"], cfg.attn_dims,
+                                   q_chunk=1, kv_chunk=cfg.kv_chunk)
+    elif mixer == "mamba":
+        o, ns, nc = S.ssm_decode(p["ssm"], h, cache["ssm"], cache["conv"], cfg.ssm_dims)
+        x, cache = x + o, {"ssm": ns, "conv": nc}
+    x, _ = _apply_mlp(cfg, p, x, mlp_kind)
+    return x, cache
+
+
+# --------------------------------------------------------------------------
+# stack init / apply (scan over groups)
+# --------------------------------------------------------------------------
+
+
+def stack_init(cfg, key, pattern, n_groups: int, dtype):
+    def one_group(k):
+        ks = jax.random.split(k, len(pattern))
+        return {f"b{i}": block_init(cfg, ks[i], mx, ml, dtype)
+                for i, (mx, ml) in enumerate(pattern)}
+
+    return jax.vmap(one_group)(jax.random.split(key, n_groups))
+
+
+def stack_apply_train(cfg, gparams, x, pattern, memory=None, causal=True):
+    def group_body(carry, gp):
+        h, aux = carry
+        for i, (mx, ml) in enumerate(pattern):
+            h, a = block_apply_train(cfg, gp[f"b{i}"], h, mx, ml, memory, causal)
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(group_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), gparams)
+    return x, aux
+
+
+def block_apply_prefill(cfg, p, x, mixer: str, mlp_kind: str, max_len: int,
+                        cache_dtype, memory=None):
+    """Train-path compute + cache construction. x: [B,S,d] → (x, cache)."""
+    B, Sq, _ = x.shape
+    d = cfg.attn_dims
+    h = _apply_norm(cfg, p["norm1"], x)
+    if mixer in ("attn", "attn_full"):
+        pos = jnp.arange(Sq)
+        q, k, v = L._qkv(p["attn"], h, d, pos)
+        kr, vr = L.replicate_kv(k, v, d.n_heads, d.n_kv,
+                                cfg.policy.tp_size if cfg.policy else 0)
+        o = L.chunked_attention(q, kr, vr, causal=(mixer == "attn"),
+                                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                policy=cfg.policy)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, p["attn"]["wo"])
+        pad = max_len - Sq
+        cache = {"k": jnp.pad(k.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0))),
+                 "v": jnp.pad(v.astype(cache_dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    elif mixer == "cross":
+        ck, cv = L.cross_kv(p["attn"], memory, d)
+        x = x + L.cross_attn_apply(p["attn"], h, ck, cv, d,
+                                   q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                   policy=cfg.policy)
+        cache = {"ck": ck.astype(cache_dtype), "cv": cv.astype(cache_dtype)}
+    elif mixer == "mamba":
+        o, final, conv_tail = S.ssm_apply(p["ssm"], h, cfg.ssm_dims, policy=cfg.policy)
+        x = x + o
+        cache = {"ssm": final, "conv": conv_tail.astype(cache_dtype)}
+    else:
+        raise ValueError(mixer)
+    x, _ = _apply_mlp(cfg, p, x, mlp_kind)
+    if cfg.policy:
+        x = _shard(x, cfg, _residual_spec(cfg, seq_sharded=True))
+    return x, cache
+
+
+def stack_apply_prefill(cfg, gparams, x, pattern, max_len, cache_dtype, memory=None):
+    def group_body(h, gp):
+        caches = {}
+        for i, (mx, ml) in enumerate(pattern):
+            h, caches[f"b{i}"] = block_apply_prefill(cfg, gp[f"b{i}"], h, mx, ml,
+                                                     max_len, cache_dtype, memory)
+        return h, caches
+
+    x, cache = jax.lax.scan(group_body, x, gparams)
+    return x, cache
+
+
+def stack_cache_init(cfg, pattern, n_groups, batch, max_len, dtype):
+    def one(mx):
+        c = block_cache_init(cfg, mx, batch, max_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape), c)
+
+    return {f"b{i}": one(mx) for i, (mx, ml) in enumerate(pattern)}
+
+
+def stack_apply_decode(cfg, gparams, x, cache, cur_len, pattern):
+    def group_body(h, scans):
+        gp, gc = scans
+        new_c = {}
+        for i, (mx, ml) in enumerate(pattern):
+            h, new_c[f"b{i}"] = block_apply_decode(cfg, gp[f"b{i}"], h, gc[f"b{i}"],
+                                                   cur_len, mx, ml)
+        return h, new_c
+
+    x, new_cache = jax.lax.scan(group_body, x, (gparams, cache))
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# embeddings + loss
+# --------------------------------------------------------------------------
+
+
+def embed_init(cfg, key, dtype):
+    e = {"embed": L.dense_init(key, (cfg.vocab, cfg.d_model), (1,), dtype)}
+    if not cfg.tie_embeddings:
+        e["unembed"] = L.dense_init(jax.random.fold_in(key, 1),
+                                    (cfg.d_model, cfg.vocab), (0,), dtype)
+    return e
+
+
+def embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _unembed_matrix(cfg, params):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def chunked_ce_loss(cfg, params, x, labels, mask, *, chunk: int = 512):
+    """Cross-entropy without a [B,S,V] resident: scan over seq chunks with
+    the logits' vocab dim sharding-constrained to the model axis."""
+    B, Sq, d = x.shape
+    W = _unembed_matrix(cfg, params)
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0
+    n = Sq // chunk
+    xs = (x.reshape(B, n, chunk, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, chunk).transpose(1, 0, 2),
+          mask.reshape(B, n, chunk).transpose(1, 0, 2))
+
+    # checkpoint: recompute the [B, chunk, V] logits block in backward rather
+    # than saving one per scan step (which would re-materialize full logits).
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, yc, mc = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, W,
+                            preferred_element_type=jnp.float32)
+        if cfg.policy:
+            logits = _shard(logits, cfg, (cfg.policy.batch, None, cfg.policy.model))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2, xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(cfg, params, x_last):
+    """x_last: [B, 1, d] → [B, 1, V] (decode head)."""
+    logits = jnp.einsum("bsd,dv->bsv", x_last, _unembed_matrix(cfg, params),
+                        preferred_element_type=jnp.float32)
+    if cfg.policy:
+        logits = _shard(logits, cfg, (cfg.policy.batch, None, cfg.policy.model))
+    return logits

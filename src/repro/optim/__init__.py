@@ -1,0 +1,4 @@
+"""Distributed optimizer substrate: AdamW, Adafactor, schedules, and
+optional int8 gradient compression with error feedback."""
+from repro.optim.adamw import adafactor, adamw, cosine_schedule  # noqa: F401
+from repro.optim.compress import compressed_psum  # noqa: F401

@@ -1,0 +1,134 @@
+"""AdamW and Adafactor, functional (init/update pairs).
+
+Adafactor (factored second moment, no first moment by default) exists for
+the 100B+ cells: AdamW's 8 bytes/param of moments would blow the per-pod
+HBM budget for jamba-1.5-398b (DESIGN.md §4); the dry-run memory_analysis
+is the arbiter. Both optimizers apply global-norm clipping and a cosine
+schedule, and both keep f32 master params (forward casts to bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def _global_norm(tree):
+    # sum(g*g), NOT vdot: vdot ravels, and reshaping a 2-axis-sharded tensor
+    # to 1D forces GSPMD to fully rematerialize it (replicated!) — a
+    # >100 GB/device bug at 100B+ params.
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(tree)))
+
+
+def _clip(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple]  # (grads, state, params, step)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip_norm=1.0,
+          schedule: Callable | None = None) -> Optimizer:
+    sched = schedule or (lambda s: lr)
+
+    def init(params):
+        z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z(), "v": z()}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        grads = _clip(grads, clip_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (p - lr_t * (u + weight_decay * p)).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_norm=1.0,
+              schedule: Callable | None = None) -> Optimizer:
+    """Factored second moment: O(rows+cols) state for matrices, O(n) for
+    vectors. No first moment → ~0.01–1 byte/param of optimizer state."""
+    sched = schedule or (lambda s: lr)
+
+    def init(params):
+        def stat(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"stats": jax.tree.map(stat, params,
+                                      is_leaf=lambda x: isinstance(x, jax.Array))}
+
+    def update(grads, state, params, step):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        grads = _clip(grads, clip_norm)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = sched(step)
+
+        def upd(p, g, s):
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                r = beta * s["r"] + (1 - beta) * g2.mean(-1)
+                c = beta * s["c"] + (1 - beta) * g2.mean(-2)
+                denom = (r[..., None] * c[..., None, :]) / jnp.maximum(
+                    r.mean(-1, keepdims=True)[..., None], eps)
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # relative step size (Adafactor's update clipping, d=1.0)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u)
+            return (p - lr_t * u).astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, params, grads, state["stats"],
+                           is_leaf=lambda x: isinstance(x, jax.Array))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        new_s = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_p, {"stats": new_s}
+
+    return Optimizer(init, update)
+
+
+def for_config(cfg) -> Optimizer:
+    if cfg.optimizer == "adafactor":
+        return adafactor()
+    return adamw()

@@ -1,0 +1,2 @@
+"""Runtime fault tolerance: heartbeats, straggler detection, restart policy."""
+from repro.runtime.fault import HeartbeatMonitor, StepMonitor, run_with_restarts  # noqa: F401

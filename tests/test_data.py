@@ -1,0 +1,44 @@
+"""Datasets + loader."""
+import numpy as np
+
+from repro.data.datasets import iris, kat7, kepler, ligo_glitch
+from repro.data.loader import feature_major, lm_batches, pad_rows
+
+
+def test_shapes_match_paper_table3():
+    Xk, yk, mk = kepler()
+    assert Xk.shape == (9, 1) and yk.shape == (9,)  # 9x2 incl. target
+    Xi, yi, mi = iris()
+    assert Xi.shape == (150, 4) and set(np.unique(yi)) == {0, 1, 2}
+    Xs, ys, ms = kat7()
+    assert Xs.shape == (10_000, 9)
+    Xl, yl, ml = ligo_glitch()
+    assert Xl.shape == (4_000, 1_373)
+    assert Xl.shape[0] * Xl.shape[1] == 5_492_000  # paper's "5.5M data points"
+
+
+def test_kepler_is_keplers_law():
+    X, y, _ = kepler()
+    np.testing.assert_allclose(y, X[:, 0] ** 1.5, rtol=0.02)
+
+
+def test_feature_major_transposition():
+    X = np.arange(12, dtype=np.float32).reshape(4, 3)
+    F = feature_major(X)
+    assert F.shape == (3, 4)
+    np.testing.assert_array_equal(F[0], X[:, 0])
+
+
+def test_pad_rows():
+    X = np.ones((10, 3), np.float32)
+    y = np.ones((10,), np.float32)
+    Xp, yp, w = pad_rows(X, y, 8)
+    assert Xp.shape == (16, 3) and w.sum() == 10
+
+
+def test_lm_batches_deterministic():
+    a = next(lm_batches(100, 2, 16, seed=3))
+    b = next(lm_batches(100, 2, 16, seed=3))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert a["tokens"].shape == (2, 16)
+    assert (np.asarray(a["tokens"]) < 100).all()

@@ -1,0 +1,68 @@
+"""Pallas kernel sweep: shapes × dtypes × fitness kernels × gather modes,
+asserted allclose against the pure-jnp oracle (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fitness import FitnessSpec
+from repro.core.trees import TreeSpec, generate_population
+from repro.kernels import ops as kops
+from repro.kernels.ref import fitness_ref
+
+
+def _case(depth, F, D, pop, seed):
+    spec = TreeSpec(max_depth=depth, n_features=F, n_consts=8)
+    op, arg = generate_population(jax.random.PRNGKey(seed), pop, spec)
+    X = jnp.asarray(np.random.RandomState(seed).randn(F, D).astype(np.float32))
+    y = jnp.asarray((np.random.RandomState(seed + 1).rand(D) * 3).astype(np.float32))
+    return spec, op, arg, X, y
+
+
+@pytest.mark.parametrize("depth", [2, 3, 5])
+@pytest.mark.parametrize("F,D", [(1, 9), (2, 37), (9, 500), (16, 1030)])
+@pytest.mark.parametrize("gather", ["onehot", "vmem"])
+def test_kernel_matches_oracle(depth, F, D, gather):
+    spec, op, arg, X, y = _case(depth, F, D, pop=21, seed=depth * 100 + F)
+    fs = FitnessSpec("r")
+    got = kops.fitness(op, arg, X, y, spec.const_table(), spec, fs, gather=gather)
+    want = fitness_ref(op, arg, X, y, spec.const_table(), spec, fs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kern,kw", [("c", dict(n_classes=3)),
+                                     ("m", dict(precision=0.5))])
+def test_kernel_classify_match(kern, kw):
+    spec, op, arg, X, y = _case(4, 4, 150, pop=16, seed=7)
+    fs = FitnessSpec(kern, **kw)
+    got = kops.fitness(op, arg, X, y, spec.const_table(), spec, fs)
+    want = fitness_ref(op, arg, X, y, spec.const_table(), spec, fs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_large_feature_count():
+    """LIGO-shaped: F=1373 forces the vmem-gather path + small data tiles."""
+    spec, op, arg, X, y = _case(5, 1373, 256, pop=8, seed=11)
+    fs = FitnessSpec("c", n_classes=2)
+    got = kops.fitness(op, arg, X, y, spec.const_table(), spec, fs)
+    want = fitness_ref(op, arg, X, y, spec.const_table(), spec, fs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_dtype_bf16_data():
+    spec, op, arg, X, y = _case(3, 4, 128, pop=8, seed=3)
+    fs = FitnessSpec("r")
+    got = kops.fitness(op, arg, X.astype(jnp.bfloat16), y, spec.const_table(), spec, fs)
+    want = fitness_ref(op, arg, X.astype(jnp.bfloat16).astype(jnp.float32), y,
+                       spec.const_table(), spec, fs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_tile_picker_respects_budget():
+    from repro.kernels.ops import pick_tiles, _VMEM_BUDGET
+    for F in (2, 64, 1373):
+        pb, db, gather = pick_tiles(F, 63, 100, 1 << 20)
+        assert db >= 128
+        base = 4 * (F * db + 2 * pb * 64 * db)
+        assert base <= _VMEM_BUDGET * 1.05

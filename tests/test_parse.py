@@ -1,0 +1,143 @@
+"""Expression parser / seed populations + new engine features."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GPConfig, TreeSpec, FitnessSpec, init_state, run
+from repro.core import primitives as prim
+from repro.core.parse import parse_tree, seed_population
+from repro.core.trees import check_invariants, generate_population, to_string
+
+
+def test_parse_simple():
+    spec = TreeSpec(max_depth=3, n_features=2, n_consts=8)
+    op, arg = parse_tree("((x0 * x0) / x1)", spec)
+    assert op[0] == prim.opcode_of("div")
+    assert op[1] == prim.opcode_of("mul")
+    assert op[2] == prim.FEATURE and arg[2] == 1
+
+
+def test_parse_functions_and_consts():
+    spec = TreeSpec(max_depth=3, n_features=1, n_consts=8,
+                    fn_set=prim.KITCHEN_SINK)
+    op, arg = parse_tree("sqrt(max(x0, 2))", spec)
+    assert op[0] == prim.opcode_of("sqrt")
+    assert op[1] == prim.opcode_of("max")
+    consts = np.asarray(spec.const_table())
+    assert np.isclose(consts[arg[4]], 2.0)
+
+
+def test_parse_feature_names():
+    spec = TreeSpec(max_depth=2, n_features=2, n_consts=8)
+    op, arg = parse_tree("(p + r)", spec, feature_names=["p", "r"])
+    assert arg[1] == 0 and arg[2] == 1
+
+
+def test_parse_errors():
+    spec = TreeSpec(max_depth=2, n_features=1, n_consts=4)
+    with pytest.raises(ValueError):
+        parse_tree("(x0 + x9)", spec)  # unknown feature
+    with pytest.raises(ValueError):
+        parse_tree("frob(x0)", spec)  # unknown function
+    with pytest.raises(ValueError):
+        parse_tree("(((x0+x0)+(x0+x0))+x0)", spec)  # too deep
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 4))
+def test_to_string_parse_roundtrip(seed, depth):
+    """to_string → parse_tree reproduces evaluation-identical trees."""
+    from repro.core.eval import evaluate_population
+
+    spec = TreeSpec(max_depth=depth, n_features=3, n_consts=8,
+                    fn_set=prim.KITCHEN_SINK)
+    op, arg = generate_population(jax.random.PRNGKey(seed), 4, spec)
+    consts = np.asarray(spec.const_table())
+    X = jnp.asarray(np.random.RandomState(0).randn(3, 16).astype(np.float32))
+    want = np.asarray(evaluate_population(op, arg, X, spec.const_table(), spec))
+    for i in range(4):
+        s = to_string(np.asarray(op[i]), np.asarray(arg[i]), const_table=consts)
+        op2, arg2 = parse_tree(s, spec)
+        got = np.asarray(evaluate_population(jnp.asarray(op2[None]),
+                                             jnp.asarray(arg2[None]), X,
+                                             spec.const_table(), spec))[0]
+        np.testing.assert_allclose(got, want[i], rtol=1e-5, atol=1e-5)
+
+
+def test_seed_population_and_early_stop():
+    """Seeding the known Kepler solution terminates generation 0."""
+    from repro.data.datasets import kepler
+    from repro.data.loader import feature_major
+
+    X_rows, y, _ = kepler()
+    spec = TreeSpec(max_depth=5, n_features=1, n_consts=8,
+                    fn_set=prim.KITCHEN_SINK)
+    cfg = GPConfig(pop_size=32, tree_spec=spec, fitness=FitnessSpec("r"),
+                   generations=30, stop_fitness=1.0)
+    state = run(cfg, feature_major(X_rows), y, key=jax.random.PRNGKey(0),
+                seeds=["sqrt(((r * r) * r))"], feature_names=["r"])
+    assert int(state.generation) == 1  # stopped immediately
+    assert float(state.best_fitness) < 1.0
+
+
+def test_seeded_population_valid():
+    spec = TreeSpec(max_depth=4, n_features=2, n_consts=8)
+    op, arg = seed_population(["(x0 + x1)", "(x0 * 2)"], spec, 16,
+                              jax.random.PRNGKey(0))
+    check_invariants(np.asarray(op), spec)
+
+
+def test_parsimony_prefers_smaller_trees():
+    """With heavy parsimony pressure, mean tree size stays below the
+    pressure-free run (bloat control beyond the depth ceiling)."""
+    from repro.core.trees import tree_sizes
+    from repro.data.datasets import kepler
+    from repro.data.loader import feature_major
+
+    X_rows, y, _ = kepler()
+    spec = TreeSpec(max_depth=5, n_features=1, n_consts=8)
+    base = dict(pop_size=60, tree_spec=spec, fitness=FitnessSpec("r"),
+                generations=10)
+    s_free = run(GPConfig(**base), feature_major(X_rows), y,
+                 key=jax.random.PRNGKey(3))
+    s_press = run(GPConfig(parsimony=5.0, **base), feature_major(X_rows), y,
+                  key=jax.random.PRNGKey(3))
+    assert float(jnp.mean(tree_sizes(s_press.op))) <= \
+        float(jnp.mean(tree_sizes(s_free.op)))
+
+
+def test_cluster_env_parsing():
+    from repro.launch.cluster import ClusterInfo, cluster_env, host_batch_slice
+
+    info = cluster_env({"COORDINATOR_ADDRESS": "10.0.0.1:1234",
+                        "NUM_PROCESSES": "8", "PROCESS_ID": "3"})
+    assert info.num_processes == 8 and info.process_id == 3
+    assert not info.is_coordinator
+    assert host_batch_slice(256, info) == slice(96, 128)
+    slurm = cluster_env({"SLURM_NTASKS": "4", "SLURM_PROCID": "2",
+                         "SLURM_NODELIST": "tpu[0-3]"})
+    assert slurm.num_processes == 4 and slurm.process_id == 2
+    single = cluster_env({})
+    assert single.num_processes == 1 and single.is_coordinator
+    with pytest.raises(ValueError):
+        host_batch_slice(10, ClusterInfo(3, 0, None))
+
+
+def test_evolve_driver_checkpoint_resume(tmp_path):
+    """The GP driver resumes mid-run from the newest committed checkpoint
+    and reaches the same final state as an uninterrupted run."""
+    from repro.launch.evolve import run_dataset
+
+    full, _, _ = run_dataset("kepler", generations=10, pop=30, log=lambda *a: None)
+    part, _, _ = run_dataset("kepler", generations=6, pop=30,
+                             ckpt_dir=str(tmp_path), ckpt_every=3,
+                             log=lambda *a: None)
+    resumed, _, _ = run_dataset("kepler", generations=10, pop=30,
+                                ckpt_dir=str(tmp_path), ckpt_every=3,
+                                log=lambda *a: None)
+    assert int(resumed.generation) == 10
+    # resumed run continues from gen 6's state (same RNG stream → same result)
+    np.testing.assert_array_equal(np.asarray(resumed.best_op),
+                                  np.asarray(full.best_op))

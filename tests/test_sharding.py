@@ -1,0 +1,90 @@
+"""Sharding rules: every param/cache/batch spec must be legal (divisible)
+on both production meshes, for every assigned architecture — this is the
+cheap non-compiling half of the dry-run contract."""
+import subprocess
+import sys
+import os
+import textwrap
+
+import pytest
+
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import jax
+    import numpy as np
+    from repro.configs import all_arch_names, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import sharding as SH
+    from repro.launch.dryrun import make_policy
+    from repro.models import model as Md
+    from repro.optim.adamw import for_config
+
+    for multi in (False, True):
+        mesh = make_production_mesh(multi_pod=multi)
+        sizes = {n: s for n, s in zip(mesh.axis_names, mesh.devices.shape)}
+        for name in all_arch_names():
+            cfg = get_config(name).with_policy(make_policy(mesh))
+            opt = for_config(cfg)
+            def init(key):
+                p = Md.init_params(cfg, key)
+                return {"params": p, "opt": opt.init(p), "step": 0}
+            shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+            specs = SH.train_state_specs(cfg, shapes, mesh)
+            def check(path, sds, spec):
+                for dim, ax in zip(sds.shape, spec):
+                    if ax is None: continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = int(np.prod([sizes[a] for a in axes]))
+                    assert dim % n == 0, (name, multi, path, sds.shape, spec)
+            jax.tree_util.tree_map_with_path(
+                lambda p, s, sp: check(p, s, sp), shapes, specs)
+            # decode cache specs
+            for shape in ("decode_32k", "long_500k"):
+                if not Md.shape_supported(cfg, shape): continue
+                kind, sp = Md.input_specs(cfg, shape)
+                cs = SH.cache_specs(cfg, sp["cache"], mesh,
+                                    seq_shard=Md.SHAPES[shape]["batch"] == 1)
+                jax.tree_util.tree_map_with_path(
+                    lambda p, s, q: check(p, s, q), sp["cache"], cs)
+    print("SPECS_OK")
+""")
+
+
+def test_all_specs_legal_on_production_meshes():
+    env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, (r.stderr[-3000:] or r.stdout[-2000:])
+    assert "SPECS_OK" in r.stdout
+
+
+def test_param_count_sanity():
+    """Config param counts must land near the published sizes."""
+    from repro.configs import get_config
+    expected = {  # billions, generous tolerance (published counts vary
+        # with embedding/tying conventions)
+        "qwen1.5-32b": (32, 0.15),
+        "gemma-2b": (2.5, 0.25),
+        "mistral-large-123b": (123, 0.10),
+        "minitron-8b": (8.3, 0.20),
+        "qwen3-moe-30b-a3b": (30.5, 0.15),
+        "jamba-1.5-large-398b": (398, 0.15),
+        "llama-3.2-vision-90b": (88, 0.20),
+        "mamba2-370m": (0.37, 0.25),
+        "whisper-medium": (0.76, 0.4),
+        "granite-moe-3b-a800m": (3.3, 0.3),
+    }
+    for name, (target, tol) in expected.items():
+        n = get_config(name).param_count() / 1e9
+        assert abs(n - target) / target < tol, (name, n, target)
+
+
+def test_active_param_counts_moe():
+    from repro.configs import get_config
+    a3b = get_config("qwen3-moe-30b-a3b").active_param_count() / 1e9
+    assert 2.0 < a3b < 4.5, a3b
+    j94 = get_config("jamba-1.5-large-398b").active_param_count() / 1e9
+    assert 75 < j94 < 110, j94

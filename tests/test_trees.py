@@ -1,0 +1,90 @@
+"""Population generation + genetic-operator structural invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import evolve as ev
+from repro.core import primitives as prim
+from repro.core.trees import (TreeSpec, check_invariants, depth_table,
+                              generate_population, subtree_mask_table, to_string,
+                              tree_sizes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), depth=st.integers(1, 6),
+       pop=st.sampled_from([1, 7, 32]), nf=st.integers(1, 9))
+def test_generation_invariants(seed, depth, pop, nf):
+    spec = TreeSpec(max_depth=depth, n_features=nf, n_consts=4)
+    op, arg = generate_population(jax.random.PRNGKey(seed), pop, spec)
+    check_invariants(np.asarray(op), spec)
+    # args in range
+    a = np.asarray(arg)
+    o = np.asarray(op)
+    assert (a[o == prim.FEATURE] < nf).all() and (a[o == prim.FEATURE] >= 0).all()
+    assert (a[o == prim.CONST] < 4).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_crossover_preserves_invariants(seed):
+    spec = TreeSpec(max_depth=5, n_features=3, n_consts=4)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    op_a, arg_a = generate_population(k1, 16, spec)
+    op_b, arg_b = generate_population(k2, 16, spec)
+    op_c, arg_c = ev.crossover(k3, op_a, arg_a, op_b, arg_b, spec)
+    check_invariants(np.asarray(op_c), spec)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mutations_preserve_invariants(seed):
+    spec = TreeSpec(max_depth=4, n_features=3, n_consts=4)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    op, arg = generate_population(k1, 16, spec)
+    op_b, arg_b = ev.mutate_branch(k2, op, arg, spec)
+    check_invariants(np.asarray(op_b), spec)
+    op_p, arg_p = ev.mutate_point(k3, op, arg, spec, p=0.5)
+    check_invariants(np.asarray(op_p), spec)
+
+
+def test_next_generation_shapes_and_elitism():
+    spec = TreeSpec(max_depth=5, n_features=2, n_consts=4)
+    key = jax.random.PRNGKey(0)
+    op, arg = generate_population(key, 32, spec)
+    fitness = jnp.arange(32.0)  # tree 0 is best
+    new_op, new_arg = ev.next_generation(key, op, arg, fitness, spec, elitism=1)
+    assert new_op.shape == op.shape
+    check_invariants(np.asarray(new_op), spec)
+    np.testing.assert_array_equal(np.asarray(new_op[0]), np.asarray(op[0]))
+    # n_out decoupling
+    new_op, _ = ev.next_generation(key, op, arg, fitness, spec, elitism=0, n_out=8)
+    assert new_op.shape == (8, spec.num_nodes)
+
+
+def test_index_tables():
+    N = 31
+    d = depth_table(N)
+    assert d[0] == 0 and d[1] == d[2] == 1 and d[30] == 4
+    m = subtree_mask_table(N)
+    assert m[0].all()  # root dominates everything
+    assert m[1, 3] and m[1, 4] and not m[1, 5]
+    assert m[3, 7] and m[3, 8] and not m[3, 9]
+
+
+def test_to_string_and_sizes():
+    spec = TreeSpec(max_depth=3, n_features=2, n_consts=4)
+    op, arg = generate_population(jax.random.PRNGKey(1), 8, spec)
+    s = to_string(np.asarray(op[0]), np.asarray(arg[0]),
+                  const_table=np.asarray(spec.const_table()))
+    assert isinstance(s, str) and len(s) > 0 and "∅" not in s
+    sizes = np.asarray(tree_sizes(op))
+    assert (sizes >= 1).all() and (sizes <= spec.num_nodes).all()
+
+
+def test_tournament_prefers_fit():
+    fitness = jnp.asarray(np.arange(64, dtype=np.float32))
+    idx = ev.tournament(jax.random.PRNGKey(0), fitness, pop=512, size=10)
+    # winners should be strongly biased toward low indices (minimization)
+    assert np.asarray(idx).mean() < 16.0
