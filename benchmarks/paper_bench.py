@@ -8,7 +8,10 @@ One benchmark per paper table/figure (DESIGN.md §6):
   Fig. 4  LIGO   (4k×1373)   millions of data points
   Tab. 4 / Fig. 5            cross-dataset platform matrix
 
-Platforms here map the paper's six configurations onto this container:
+The paper's six platform configurations are the EvalBackend registry
+(`repro.gp.backends`), so every cell is the SAME code path —
+`GPSession(backend=...)` — timed per generation:
+
   scalar      = core/scalar_eval.py  (paper: 1-CPU_SP — SymPy, per-point)
   jnp         = vectorized XLA path  (paper: *-CPU_TF)
   pallas      = fused kernel, interpret mode (paper: GPU_TF; on real TPU
@@ -16,7 +19,7 @@ Platforms here map the paper's six configurations onto this container:
 
 Methodology follows §3.2–3.3: identical GP parameters (Table 2) across
 platforms, wall time for a full run of G generations. The scalar baseline
-runs reduced generations and extrapolates linearly — the same `*`
+runs reduced generations/rows and extrapolates linearly — the same `*`
 extrapolation the paper applies to its own Table 4 cells (48 h entries).
 """
 from __future__ import annotations
@@ -24,70 +27,39 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
-from repro.core import GPConfig, TreeSpec, FitnessSpec, evolve_step, init_state
-from repro.core import evolve as ev
-from repro.core import primitives as prim
-from repro.core.scalar_eval import fitness_scalar
 from repro.data.datasets import BY_NAME
-from repro.data.loader import feature_major
+from repro.gp import GPSession, get_backend
 
 TABLE2 = dict(pop_size=100, tourn_size=10, generations=30)
 
 
-def _cfg(name, meta, F, impl, pop=None, depth=5):
-    fset = prim.KITCHEN_SINK if meta["kernel"] == "r" else prim.CLASSIFY_SET
-    return GPConfig(
-        name=f"karoo-{name}", pop_size=pop or TABLE2["pop_size"],
-        tree_spec=TreeSpec(max_depth=depth, n_features=F, n_consts=8, fn_set=fset),
-        fitness=FitnessSpec(meta["kernel"], n_classes=meta.get("n_classes", 3)),
-        tourn_size=TABLE2["tourn_size"], generations=TABLE2["generations"],
-        eval_impl=impl)
+def make_session(name: str, backend: str, *, pop=None, depth: int = 5,
+                 max_rows=None) -> GPSession:
+    """Table-2 configured session on a paper dataset — one front door for
+    every (dataset × platform) cell."""
+    return GPSession.from_dataset(
+        name, max_rows=max_rows, backend=backend,
+        pop_size=pop or TABLE2["pop_size"], max_depth=depth, n_consts=8,
+        tourn_size=TABLE2["tourn_size"], generations=TABLE2["generations"])
 
 
-def time_vectorized(name: str, impl: str, generations: int, *, pop=None,
-                    seed=0) -> float:
-    """Wall seconds for `generations` full GP generations (jit warm)."""
-    X_rows, y, meta = BY_NAME[name]()
-    cfg = _cfg(name, meta, X_rows.shape[1], impl, pop)
-    X = jax.numpy.asarray(feature_major(X_rows))
-    yj = jax.numpy.asarray(np.asarray(y, np.float32))
-    state = init_state(cfg, jax.random.PRNGKey(seed))
-    state = evolve_step(cfg, state, X, yj)  # compile outside the clock
-    jax.block_until_ready(state.fitness)
+def time_backend(name: str, backend: str, generations: int, *, pop=None,
+                 max_rows=None, seed=0) -> tuple[float, int, int]:
+    """Wall seconds for `generations` full GP generations on `backend`
+    (jit warm for the jitted platforms). Returns (s, rows_used, rows_total)."""
+    rows_total = BY_NAME[name]()[0].shape[0]
+    sess = make_session(name, backend, pop=pop, max_rows=max_rows)
+    rows_used = sess.n_rows
+    sess.init(key=jax.random.PRNGKey(seed))
+    if get_backend(backend).jittable:
+        sess.step()  # compile outside the clock (nothing to warm for scalar)
+    jax.block_until_ready(sess.state.fitness)
     t0 = time.perf_counter()
     for _ in range(generations):
-        state = evolve_step(cfg, state, X, yj)
-    jax.block_until_ready(state.fitness)
-    return time.perf_counter() - t0
-
-
-def time_scalar(name: str, generations: int, *, seed=0,
-                max_rows: int | None = None) -> tuple[float, int, int]:
-    """Wall seconds for `generations` generations with the paper-baseline
-    scalar interpreter doing evaluation (selection/ops still negligible).
-    Returns (seconds, rows_used, rows_total)."""
-    X_rows, y, meta = BY_NAME[name]()
-    rows_total = X_rows.shape[0]
-    if max_rows and rows_total > max_rows:
-        X_rows, y = X_rows[:max_rows], y[:max_rows]
-    cfg = _cfg(name, meta, X_rows.shape[1], "jnp")
-    state = init_state(cfg, jax.random.PRNGKey(seed))
-    consts = np.asarray(cfg.tree_spec.const_table())
-    key = jax.random.PRNGKey(seed + 1)
-    op, arg = np.asarray(state.op), np.asarray(state.arg)
-    t0 = time.perf_counter()
-    for g in range(generations):
-        fit = fitness_scalar(op, arg, X_rows, y, consts,
-                             kernel=cfg.fitness.kernel,
-                             n_classes=cfg.fitness.n_classes)
-        key, k2 = jax.random.split(key)
-        new_op, new_arg = ev.next_generation(
-            k2, jax.numpy.asarray(op), jax.numpy.asarray(arg),
-            jax.numpy.asarray(fit), cfg.tree_spec, cfg.mix, cfg.tourn_size, 1)
-        op, arg = np.asarray(new_op), np.asarray(new_arg)
-    return time.perf_counter() - t0, X_rows.shape[0], rows_total
+        sess.step()
+    jax.block_until_ready(sess.state.fitness)
+    return time.perf_counter() - t0, rows_used, rows_total
 
 
 def bench_figure(name: str, *, scalar_gens: int, vector_gens: int,
@@ -95,14 +67,14 @@ def bench_figure(name: str, *, scalar_gens: int, vector_gens: int,
     """One figure: scalar baseline + each vectorized platform, normalized to
     full-run (30 generations, full rows) wall time."""
     G = TABLE2["generations"]
-    t_s, rows_used, rows_total = time_scalar(name, scalar_gens,
-                                             max_rows=scalar_max_rows)
+    t_s, rows_used, rows_total = time_backend(name, "scalar", scalar_gens,
+                                              max_rows=scalar_max_rows)
     scalar_full = t_s * (G / scalar_gens) * (rows_total / rows_used)
     out = {"dataset": name, "scalar_s_extrapolated": scalar_full,
            "scalar_measured_s": t_s, "scalar_gens": scalar_gens,
            "scalar_rows": rows_used}
     for impl in impls:
-        t_v = time_vectorized(name, impl, vector_gens)
+        t_v, _, _ = time_backend(name, impl, vector_gens)
         full = t_v * (G / vector_gens)
         out[f"{impl}_s"] = full
         out[f"speedup_{impl}"] = scalar_full / full

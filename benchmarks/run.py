@@ -73,11 +73,11 @@ def bench_table4(results):
 def bench_scaling():
     """Beyond-paper: vectorized-engine scaling in population size (the
     paper scales data; production GP also scales populations)."""
-    from benchmarks.paper_bench import time_vectorized
+    from benchmarks.paper_bench import time_backend
 
     base = None
     for pop in (100, 400, 1600):
-        t = time_vectorized("kat7", "jnp", generations=3, pop=pop) / 3
+        t = time_backend("kat7", "jnp", 3, pop=pop)[0] / 3
         base = base or t
         print(f"scaling_kat7_pop{pop},{t*1e6:.1f},"
               f"work_x={pop/100:.0f};time_x={t/base:.2f}")

@@ -9,17 +9,13 @@ paper; DESIGN.md §5.)
 
     PYTHONPATH=src python examples/gp_feature_search.py
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core import GPConfig, TreeSpec, FitnessSpec, run
-from repro.core.trees import to_string
-from repro.data.loader import feature_major, lm_batches
+from repro.data.loader import lm_batches
+from repro.gp import GPSession
 from repro.models import model as Md
 from repro.models import transformer as T
 
@@ -54,18 +50,14 @@ def main():
     print(f"features: {X_rows.shape}, target: per-token NLL "
           f"(mean {y.mean():.3f})")
 
-    spec = TreeSpec(max_depth=4, n_features=6, n_consts=8)
-    gp = GPConfig(name="feature-search", pop_size=120, tree_spec=spec,
-                  fitness=FitnessSpec("r"), generations=20)
-    state = run(gp, feature_major(X_rows), y, key=jax.random.PRNGKey(1))
     names = ["norm", "mean", "std", "amax", "lse", "maxlogit"]
-    expr = to_string(np.asarray(state.best_op), np.asarray(state.best_arg),
-                     feature_names=names,
-                     const_table=np.asarray(spec.const_table()))
+    sess = GPSession(name="feature-search", pop_size=120, generations=20,
+                     max_depth=4, kernel="r", feature_names=names)
+    sess.fit(X_rows, y, key=jax.random.PRNGKey(1))
     base = np.abs(y - y.mean()).sum()
-    print(f"evolved loss-predictor: {expr}")
-    print(f"sum|err| {float(state.best_fitness):.2f} vs mean-baseline {base:.2f}")
-    assert float(state.best_fitness) < base, "GP should beat the mean predictor"
+    print(f"evolved loss-predictor: {sess.best_expression()}")
+    print(f"sum|err| {sess.best_fitness:.2f} vs mean-baseline {base:.2f}")
+    assert sess.best_fitness < base, "GP should beat the mean predictor"
 
 
 if __name__ == "__main__":

@@ -2,15 +2,13 @@
 the KAT-7-shaped dataset (10,000 × 9), full Table-2 configuration, 30
 generations, per-generation archiving, wall-clock report.
 
-    PYTHONPATH=src python examples/karoo_kat7.py [--impl pallas] [--archive DIR]
+    pip install -e .          # once, from the repo root
+    python examples/karoo_kat7.py [--backend pallas] [--archive DIR]
 
 This is the run that took 48 hours in scalar/SymPy form and ~3 minutes
-vectorized in the paper (Fig. 3); here both the vectorized XLA path and
-the fused Pallas kernel path are available.
+vectorized in the paper (Fig. 3); `--backend scalar | jnp | pallas` walks
+the same axis here, all through `repro.gp.GPSession`.
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import argparse
 
 from repro.launch.evolve import run_dataset
@@ -18,16 +16,17 @@ from repro.launch.evolve import run_dataset
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--impl", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--backend", "--impl", dest="backend", default="jnp",
+                    help="eval backend: scalar | jnp | pallas | auto")
     ap.add_argument("--generations", type=int, default=30)
     ap.add_argument("--archive", default=None)
     args = ap.parse_args()
     state, wall, history = run_dataset(
-        "kat7", generations=args.generations, pop=100, impl=args.impl,
+        "kat7", generations=args.generations, pop=100, backend=args.backend,
         archive=args.archive)
     acc = -float(state.best_fitness) / 10_000
     print(f"wall: {wall:.1f}s for {args.generations} generations "
-          f"({args.impl}); best accuracy {acc:.3f}")
+          f"({args.backend}); best accuracy {acc:.3f}")
     print("(paper: same configuration was 48 h scalar / ~197 s vectorized)")
 
 

@@ -2,11 +2,8 @@
 KV/SSM cache — the serve_step that the decode_32k/long_500k dry-run cells
 lower at production scale.
 
-    PYTHONPATH=src python examples/lm_serve.py --arch mamba2-370m --tokens 24
+    python examples/lm_serve.py --arch mamba2-370m --tokens 24
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import argparse
 import time
 

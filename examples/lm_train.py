@@ -1,16 +1,13 @@
 """Train a reduced-config LM from the assigned-architecture zoo, end to
 end: sharded train step, checkpoint/resume, straggler monitor.
 
-    PYTHONPATH=src python examples/lm_train.py --arch gemma-2b --steps 60
+    python examples/lm_train.py --arch gemma-2b --steps 60
 
 Any of the 10 assigned architectures works (--arch qwen3-moe-30b-a3b,
 mamba2-370m, jamba-1.5-large-398b, ...); reduced configs keep it
 CPU-friendly while exercising the exact production code path
 (launch/train.py drives full configs on a real pod).
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import argparse
 import dataclasses
 import tempfile

@@ -1,38 +1,28 @@
 """Quickstart: rediscover Kepler's 3rd law with the vectorized GP engine.
 
-    PYTHONPATH=src python examples/quickstart.py
+    pip install -e .          # once, from the repo root
+    python examples/quickstart.py
 
 The engine evolves symbolic expressions over (orbital radius r) to predict
 (orbital period p); the known answer is p = sqrt(r^3). Runs in seconds on
-CPU — the same engine scales to a 512-chip mesh via launch/dryrun.py.
+CPU — the same `GPSession` scales to a 512-chip mesh by adding
+`topology=MeshTopology(data=..., model=..., pod=...)` (see launch/dryrun.py).
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
 import jax
-import numpy as np
 
-from repro.core import GPConfig, TreeSpec, FitnessSpec, run
-from repro.core import primitives as prim
-from repro.core.trees import to_string
-from repro.data.datasets import kepler
-from repro.data.loader import feature_major
+from repro.gp import GPSession
 
 
 def main():
-    X_rows, y, meta = kepler()
-    spec = TreeSpec(max_depth=5, n_features=1, n_consts=8,
-                    fn_set=prim.KITCHEN_SINK)
-    cfg = GPConfig(name="kepler-quickstart", pop_size=200, tree_spec=spec,
-                   fitness=FitnessSpec("r"), generations=30)
-    state = run(cfg, feature_major(X_rows), y, key=jax.random.PRNGKey(0),
-                callback=lambda g, s: g % 10 == 0 and print(
-                    f"gen {g:2d}  best sum|err| = {float(s.best_fitness):.4f}"))
-    tree = to_string(np.asarray(state.best_op), np.asarray(state.best_arg),
-                     feature_names=["r"],
-                     const_table=np.asarray(spec.const_table()))
-    print(f"\nBest evolved law: p = {tree}")
-    print(f"Residual: {float(state.best_fitness):.5f} (sum |err| over 9 planets)")
+    sess = GPSession.from_dataset(
+        "kepler", name="kepler-quickstart", pop_size=200, generations=30,
+        callback=lambda g, s: g % 10 == 0 and print(
+            f"gen {g:2d}  best sum|err| = {float(s.best_fitness):.4f}"))
+    sess.init(key=jax.random.PRNGKey(0))
+    sess.evolve()
+    print(f"\nBest evolved law: p = {sess.best_expression()}")
+    print(f"Residual: {sess.best_fitness:.5f} (sum |err| over 9 planets)")
+    print(f"Backend: {sess.backend} (auto-selected)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,81 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the current jax API (`jax.shard_map`, `jax.set_mesh`,
+`jax.sharding.AxisType`, dict-valued `Compiled.cost_analysis()`), but the
+deployment containers pin a range of releases down to 0.4.x, where those
+live under different names (`jax.experimental.shard_map.shard_map` with
+`check_rep`, the `Mesh` context manager, no axis types, list-valued
+cost analysis). Every call site goes through this module so the rest of
+the tree is version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5: explicit/auto axis types
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax 0.4.x: all axes behave like Auto
+    _AxisType = None
+
+
+def make_mesh(axis_shapes, axis_names):
+    """`jax.make_mesh` with Auto axis types where the installed jax has them."""
+    if _AxisType is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(_AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, in_specs, out_specs, mesh=None):
+        if mesh is None:
+            return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                                 check_vma=False)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def _active_mesh():
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            raise ValueError("shard_map without mesh= needs an active mesh "
+                             "context (`with compat.set_mesh(mesh): ...`)")
+        return mesh
+
+    def shard_map(f, *, in_specs, out_specs, mesh=None):
+        return _shard_map(f, mesh=mesh if mesh is not None else _active_mesh(),
+                          in_specs=in_specs, out_specs=out_specs,
+                          check_rep=False)
+
+
+def set_mesh(mesh):
+    """Context manager entering `mesh`. On current jax this is
+    `jax.set_mesh`; on 0.4.x the Mesh object itself is the context."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(name) -> int:
+    """Static size of a named mesh axis from inside shard_map
+    (`jax.lax.axis_size` on current jax; the axis frame on 0.4.x)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    from jax._src.core import axis_frame
+
+    frame = axis_frame(name)  # returns the bare size on some 0.4.x releases
+    return frame if isinstance(frame, int) else frame.size
+
+
+def cost_analysis(compiled) -> dict:
+    """`Compiled.cost_analysis()` as a flat dict on every jax version
+    (0.4.x returns a per-device list of dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

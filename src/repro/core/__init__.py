@@ -4,5 +4,7 @@ Tensorized tree populations, vectorized evaluation, fitness kernels,
 jittable genetic operators, and the sharded generation step.
 """
 from repro.core.engine import GPConfig, GPState, evolve_step, init_state, run, sharded_evolve_step  # noqa: F401
-from repro.core.fitness import FitnessSpec  # noqa: F401
+from repro.core.fitness import (  # noqa: F401
+    FitnessKernel, FitnessSpec, available_kernels, get_kernel, register_kernel,
+)
 from repro.core.trees import TreeSpec  # noqa: F401

@@ -18,6 +18,7 @@ Engine state is a pytree, so checkpointing/restore reuses ckpt/ unchanged.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, NamedTuple
 
@@ -26,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import evolve as ev
 from repro.core import fitness as fit
 from repro.core.trees import TreeSpec, generate_population
@@ -45,7 +47,7 @@ class GPConfig:
     elitism: int = 1
     parsimony: float = 0.0  # bloat pressure: selection fitness += p * size
     stop_fitness: float | None = None  # early termination threshold (run())
-    eval_impl: str = "jnp"  # 'jnp' | 'pallas'
+    eval_impl: str = "jnp"  # any jittable name in repro.gp.backends
     data_tile: int = 1024  # pallas data-tile (lane-dim multiple of 128)
     migrate_every: int = 10  # pod-axis island migration period
     migrate_k: int = 4  # elites exchanged per migration
@@ -69,16 +71,18 @@ class GPState(NamedTuple):
 
 
 def _eval_fitness(cfg: GPConfig, op, arg, X, y, const_table):
-    """Dispatch to the Pallas fused kernel or the jnp reference path (tiled
-    over data so the [pop, nodes, data] buffer is HBM-bounded)."""
-    if cfg.eval_impl == "pallas":
-        from repro.kernels import ops as kops
+    """Dispatch to the EvalBackend registered under `cfg.eval_impl`
+    (repro.gp.backends — pallas fused kernel, jnp tiled reference, or any
+    user-registered jittable backend)."""
+    from repro.gp.backends import get_backend
 
-        return kops.fitness(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
-                            data_tile=cfg.data_tile)
-    from repro.kernels.ref import fitness_ref_tiled
-
-    return fitness_ref_tiled(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness)
+    backend = get_backend(cfg.eval_impl)
+    if not backend.jittable:
+        raise ValueError(
+            f"eval backend {backend.name!r} is host-only and cannot run inside "
+            f"the jitted generation step; drive it through repro.gp.GPSession")
+    return backend.fitness(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
+                           data_tile=cfg.data_tile)
 
 
 def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
@@ -130,20 +134,20 @@ def evolve_step(cfg: GPConfig, state: GPState, X, y) -> GPState:
 
 def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
         callback=None, seeds=None, feature_names=None) -> GPState:
-    """Drive `generations` steps (host loop — each step is one XLA program).
-    Stops early when `cfg.stop_fitness` is reached (Karoo's termination
-    criteria; the paper's benchmark runs disable it, §3.2)."""
-    key = key if key is not None else jax.random.PRNGKey(0)
-    state = init_state(cfg, key, seeds=seeds, feature_names=feature_names)
-    X = jnp.asarray(X, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
-    for g in range(generations or cfg.generations):
-        state = evolve_step(cfg, state, X, y)
-        if callback is not None:
-            callback(g, state)
-        if cfg.stop_fitness is not None and float(state.best_fitness) <= cfg.stop_fitness:
-            break
-    return state
+    """DEPRECATED — thin forwarder to :class:`repro.gp.GPSession`, kept so
+    pre-session callers don't break. X is feature-major [F, D] (the old
+    contract); the session's own `fit` takes row-major data."""
+    warnings.warn(
+        "repro.core.run is deprecated; use repro.gp.GPSession "
+        "(session = GPSession(cfg); session.fit(X_rows, y)) instead",
+        DeprecationWarning, stacklevel=2)
+    from repro.gp import GPSession
+
+    sess = GPSession(cfg, feature_names=feature_names, callback=callback)
+    sess.ingest(X, y, layout="features")
+    sess.init(key=key, seeds=seeds)
+    sess.evolve(generations)
+    return sess.state
 
 
 # --- mesh-sharded step --------------------------------------------------------
@@ -159,6 +163,12 @@ def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="mo
     ready for jit/lower. best_* is replicated (global argmin over pods).
     """
     from repro.core.islands import migrate
+
+    kern = fit.get_kernel(cfg.fitness.kernel)
+    if not kern.decomposable:
+        raise ValueError(
+            f"fitness kernel {kern.name!r} is not sum-decomposable over data; "
+            f"its partials cannot be psum-reduced across the {data_axis!r} axis")
 
     pod_dims = (pod_axis,) if pod_axis else ()
     n_shards = mesh.shape[model_axis]
@@ -224,10 +234,9 @@ def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="mo
         return GPState(state.key, new_op, new_arg, fitness_local, best_op, best_arg,
                        best_fit, state.generation + 1)
 
-    smapped = jax.shard_map(
+    smapped = compat.shard_map(
         step, mesh=mesh,
         in_specs=(state_specs, data_spec, y_spec),
         out_specs=state_specs,
-        check_vma=False,
     )
     return smapped, dict(state=state_specs, X=data_spec, y=y_spec)

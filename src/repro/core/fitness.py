@@ -1,13 +1,32 @@
-"""Fitness kernels — Karoo GP's (r)egression, (c)lassification, (m)atch.
+"""Fitness kernels — a registry of pluggable GP objectives.
 
-Karoo appends a per-kernel fitness sub-graph to each tree's TF graph; we
-fuse the same reductions after the vectorized evaluation. All kernels
-return a per-tree score under a common MINIMIZE convention (classify and
-match are negated hit-counts) so selection code is kernel-agnostic.
+Karoo GP appends a per-kernel fitness sub-graph to each tree's TF graph;
+we fuse the same reductions after the vectorized evaluation. The paper's
+three kernels — (r)egression, (c)lassification, (m)atch — ship built in,
+plus `mse` and `pearson`; new objectives register a `FitnessKernel` and
+every evaluation path (jnp reference, tiled reference, Pallas fused
+kernel, scalar baseline) and the selection code pick them up without
+modification.
+
+Conventions every kernel obeys:
+
+  * MINIMIZE — lower fitness is better (classify and match are negated
+    hit counts), so selection code is kernel-agnostic.
+  * `partial_fitness(preds, y, weight, spec)` returns a per-tree f32[P]
+    partial over one data tile. When `decomposable`, partials from
+    different tiles are summed (jnp tiling, Pallas grid accumulation,
+    mesh `psum`) to form the full fitness; non-decomposable kernels
+    (e.g. Pearson) only run on un-tiled single-device paths.
+  * `weight` masks data padding: points with weight 0 contribute nothing.
+  * NaN sanitization — a NaN prediction at any *valid* (weight > 0)
+    point makes the tree's fitness +inf. A NaN-producing tree must never
+    win a tournament in ANY kernel (`round(NaN)` → int is undefined, so
+    classify/match cannot just bin the prediction).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import jax.numpy as jnp
 
@@ -18,12 +37,52 @@ MATCH = "m"
 
 @dataclasses.dataclass(frozen=True)
 class FitnessSpec:
-    kernel: str = REGRESSION  # 'r' | 'c' | 'm'
+    kernel: str = REGRESSION  # any name registered in the kernel registry
     n_classes: int = 3  # classify only
     precision: float = 1e-4  # match tolerance (paper: 4 decimal places)
 
     def __hash__(self):
         return hash((self.kernel, self.n_classes, self.precision))
+
+
+@dataclasses.dataclass(frozen=True)
+class FitnessKernel:
+    """One pluggable objective. `partial_fitness` and `metric` must be
+    pure jnp (they also run inside the Pallas kernel body and under
+    shard_map)."""
+
+    name: str
+    partial_fitness: Callable  # (preds[P,D], y[D], w[D], spec) -> f32[P]
+    metric: Callable  # (preds[P,D], y[D], spec) -> f32[P] human-facing
+    aliases: tuple = ()
+    decomposable: bool = True  # partials may be summed across data tiles
+
+
+_REGISTRY: dict[str, FitnessKernel] = {}
+
+
+def register_kernel(kernel: FitnessKernel, *, overwrite: bool = False) -> FitnessKernel:
+    for key in (kernel.name, *kernel.aliases):
+        if key in _REGISTRY and not overwrite:
+            raise ValueError(f"fitness kernel {key!r} already registered "
+                             f"(pass overwrite=True to replace)")
+        _REGISTRY[key] = kernel
+    return kernel
+
+
+def get_kernel(name: str) -> FitnessKernel:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown fitness kernel {name!r}; registered: "
+                         f"{available_kernels()}") from None
+
+
+def available_kernels() -> list[str]:
+    return sorted({k.name for k in _REGISTRY.values()})
+
+
+# --- built-in kernels ---------------------------------------------------------
 
 
 def classify_labels(preds, n_classes: int):
@@ -32,27 +91,87 @@ def classify_labels(preds, n_classes: int):
     return jnp.clip(jnp.round(preds), 0, n_classes - 1).astype(jnp.int32)
 
 
-def fitness_from_preds(preds, y, spec: FitnessSpec):
+def _has_invalid(preds, w):
+    """True per tree iff any valid data point evaluated to NaN."""
+    return (jnp.isnan(preds) & (w[None, :] > 0)).any(-1)
+
+
+def _regression_partial(preds, y, w, spec):
+    err = jnp.abs(preds - y[None, :])
+    err = jnp.where(w[None, :] > 0, err, 0.0)  # mask BEFORE inf-sanitize
+    # inf-inf in an evolved expression yields NaN; a NaN fitness must
+    # never win a tournament -> sanitize to +inf (minimize convention)
+    return jnp.where(jnp.isnan(err), jnp.inf, err).sum(-1)
+
+
+def _classify_partial(preds, y, w, spec):
+    lab = jnp.clip(jnp.round(jnp.nan_to_num(preds)), 0, spec.n_classes - 1)
+    hits = ((lab == y[None, :]) * w[None, :]).sum(-1)
+    return jnp.where(_has_invalid(preds, w), jnp.inf, -hits)
+
+
+def _match_partial(preds, y, w, spec):
+    hit = jnp.abs(preds - y[None, :]) <= spec.precision  # NaN compares False
+    hits = (hit * w[None, :]).sum(-1)
+    return jnp.where(_has_invalid(preds, w), jnp.inf, -hits)
+
+
+def _mse_partial(preds, y, w, spec):
+    err2 = jnp.square(preds - y[None, :])
+    err2 = jnp.where(w[None, :] > 0, err2, 0.0)
+    return jnp.where(jnp.isnan(err2), jnp.inf, err2).sum(-1)
+
+
+def _pearson_partial(preds, y, w, spec):
+    """1 - r² against the target — needs global moments, so this kernel is
+    NOT decomposable over data tiles."""
+    w_ = w[None, :]
+    n = jnp.maximum(w.sum(), 1.0)
+    p0 = jnp.nan_to_num(preds)
+    mx = (p0 * w_).sum(-1, keepdims=True) / n
+    my = (y[None, :] * w_).sum(-1, keepdims=True) / n
+    dx = (p0 - mx) * w_
+    dy = (y[None, :] - my) * w_
+    r2 = jnp.square((dx * dy).sum(-1)) / jnp.maximum(
+        (dx * dx).sum(-1) * (dy * dy).sum(-1), 1e-12)
+    return jnp.where(_has_invalid(preds, w), jnp.inf, 1.0 - r2)
+
+
+register_kernel(FitnessKernel(
+    name=REGRESSION, aliases=("regression", "abs"),
+    partial_fitness=_regression_partial,
+    metric=lambda preds, y, spec: jnp.abs(preds - y[None, :]).mean(-1)))
+register_kernel(FitnessKernel(
+    name=CLASSIFY, aliases=("classify", "classification"),
+    partial_fitness=_classify_partial,
+    metric=lambda preds, y, spec: (
+        classify_labels(jnp.nan_to_num(preds), spec.n_classes)
+        == y[None, :].astype(jnp.int32)).mean(-1)))
+register_kernel(FitnessKernel(
+    name=MATCH, aliases=("match",),
+    partial_fitness=_match_partial,
+    metric=lambda preds, y, spec: (
+        jnp.abs(preds - y[None, :]) <= spec.precision).mean(-1)))
+register_kernel(FitnessKernel(
+    name="mse", partial_fitness=_mse_partial,
+    metric=lambda preds, y, spec: jnp.square(preds - y[None, :]).mean(-1)))
+register_kernel(FitnessKernel(
+    name="pearson", decomposable=False,
+    partial_fitness=_pearson_partial,
+    metric=lambda preds, y, spec: _pearson_partial(
+        preds, y, jnp.ones_like(y, jnp.float32), spec)))
+
+
+# --- convenience entry points (kept for callers that hold raw preds) ---------
+
+
+def fitness_from_preds(preds, y, spec: FitnessSpec, weight=None):
     """preds: [P, D] predictions; y: [D] targets. Returns float32[P] (minimize)."""
     y = y.astype(jnp.float32)
-    if spec.kernel == REGRESSION:
-        err = jnp.abs(preds - y[None, :])
-        # inf-inf in an evolved expression yields NaN; a NaN fitness must
-        # never win a tournament -> sanitize to +inf (minimize convention)
-        return jnp.where(jnp.isnan(err), jnp.inf, err).sum(-1)
-    if spec.kernel == CLASSIFY:
-        hits = (classify_labels(preds, spec.n_classes) == y[None, :].astype(jnp.int32)).sum(-1)
-        return -hits.astype(jnp.float32)
-    if spec.kernel == MATCH:
-        hits = (jnp.abs(preds - y[None, :]) <= spec.precision).sum(-1)
-        return -hits.astype(jnp.float32)
-    raise ValueError(f"unknown fitness kernel {spec.kernel!r}")
+    w = jnp.ones_like(y) if weight is None else weight.astype(jnp.float32)
+    return get_kernel(spec.kernel).partial_fitness(preds, y, w, spec)
 
 
 def accuracy_from_preds(preds, y, spec: FitnessSpec):
     """Human-facing metric (fraction correct / mean abs err) for reporting."""
-    if spec.kernel == CLASSIFY:
-        return (classify_labels(preds, spec.n_classes) == y[None, :].astype(jnp.int32)).mean(-1)
-    if spec.kernel == MATCH:
-        return (jnp.abs(preds - y[None, :]) <= spec.precision).mean(-1)
-    return jnp.abs(preds - y[None, :]).mean(-1)
+    return get_kernel(spec.kernel).metric(preds, y.astype(jnp.float32), spec)

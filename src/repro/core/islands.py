@@ -14,6 +14,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def migrate(cfg, op_local, arg_local, elite_op, elite_arg, generation,
             pod_axis: str, is_receiver):
@@ -26,7 +28,7 @@ def migrate(cfg, op_local, arg_local, elite_op, elite_arg, generation,
     (`is_receiver`, one per pod) overwrites its last k offspring slots
     when a migration generation comes due.
     """
-    n_pods = jax.lax.axis_size(pod_axis)
+    n_pods = compat.axis_size(pod_axis)
     if n_pods <= 1:
         return op_local, arg_local
     k = cfg.migrate_k

@@ -91,15 +91,11 @@ def evaluate_population_scalar(op, arg, X_rows, const_table) -> np.ndarray:
 
 def fitness_scalar(op, arg, X_rows, y, const_table, kernel: str = "r",
                    n_classes: int = 3, precision: float = 1e-4) -> np.ndarray:
+    """Scalar-evaluated predictions reduced by the registered FitnessKernel
+    (the reduction is negligible next to the per-point interpreter; sharing
+    the kernel registry keeps the NaN semantics identical across paths)."""
+    from repro.core.fitness import FitnessSpec, fitness_from_preds
+
     preds = evaluate_population_scalar(op, arg, X_rows, const_table)
-    y = np.asarray(y, np.float32)
-    if kernel == "r":
-        err = np.abs(preds - y[None])
-        err = np.where(np.isnan(err), np.inf, err)
-        return err.sum(-1)
-    if kernel == "c":
-        lab = np.clip(np.round(preds), 0, n_classes - 1).astype(np.int32)
-        return -(lab == y[None].astype(np.int32)).sum(-1).astype(np.float32)
-    if kernel == "m":
-        return -(np.abs(preds - y[None]) <= precision).sum(-1).astype(np.float32)
-    raise ValueError(kernel)
+    spec = FitnessSpec(kernel, n_classes=n_classes, precision=precision)
+    return np.asarray(fitness_from_preds(preds, np.asarray(y, np.float32), spec))

@@ -1,0 +1,17 @@
+"""repro.gp — the public GP API.
+
+One front door (`GPSession`) over every run shape the paper spans —
+scalar baseline, vectorized XLA, fused Pallas kernel, single device or
+`MeshTopology(data=, model=, pod=)` island meshes — plus the two
+registries that make the spectrum pluggable (`backends`, fitness kernels
+in `repro.core.fitness`) and sklearn-style facades.
+"""
+from repro.core.engine import GPConfig, GPState  # noqa: F401
+from repro.core.fitness import (  # noqa: F401
+    FitnessKernel, FitnessSpec, available_kernels, get_kernel, register_kernel,
+)
+from repro.gp.backends import (  # noqa: F401
+    EvalBackend, auto_select, available_backends, get_backend, register_backend,
+)
+from repro.gp.estimators import SymbolicClassifier, SymbolicRegressor  # noqa: F401
+from repro.gp.session import GPSession, MeshTopology, make_config  # noqa: F401

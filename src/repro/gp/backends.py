@@ -1,0 +1,139 @@
+"""EvalBackend registry — the paper's platform axis as pluggable objects.
+
+The paper's result is one GP algorithm spanning six platforms by swapping
+the evaluation configuration (scalar/SymPy vs. vector/TensorFlow, CPU vs.
+GPU). Here each platform is an `EvalBackend` registered by name:
+
+    scalar   the paper-faithful per-data-point interpreter (1-CPU_SP) —
+             host-only, the baseline every speedup figure divides by
+    jnp      vectorized XLA level-sweep (the paper's *-CPU_TF column)
+    pallas   fused eval+fitness TPU kernel (GPU_TF / compiled-kernel
+             column; interpret mode off-TPU)
+
+Every backend exposes `evaluate(op, arg, X, const_table, tree_spec)` →
+predictions and a fused `fitness(...)` → per-tree score, so the engine,
+session, benchmarks and tests switch platforms with one string. New
+execution strategies (e.g. a CUDA kernel, a sparse evaluator) register
+here and are immediately reachable from `GPSession(backend=...)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalBackend:
+    """One evaluation platform.
+
+    evaluate: (op[P,N], arg[P,N], X[F,D], const_table[C], tree_spec) -> preds[P,D]
+    fitness:  (op, arg, X, y, const_table, tree_spec, fit_spec, data_tile) -> f32[P]
+
+    `jittable` backends run inside the engine's jitted generation step
+    (and under shard_map on a mesh); host-only backends are driven by
+    GPSession's host generation loop instead.
+    """
+
+    name: str
+    evaluate: Callable
+    fitness: Callable
+    jittable: bool = True
+    supports_topology: bool = True
+    fused_fitness: bool = False  # evaluation+reduction in one kernel
+    description: str = ""
+
+    def capabilities(self) -> dict:
+        return {"name": self.name, "jittable": self.jittable,
+                "supports_topology": self.supports_topology,
+                "fused_fitness": self.fused_fitness,
+                "description": self.description}
+
+
+_REGISTRY: dict[str, EvalBackend] = {}
+
+
+def register_backend(backend: EvalBackend, *, overwrite: bool = False) -> EvalBackend:
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"eval backend {backend.name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> EvalBackend:
+    if name == "auto":
+        return _REGISTRY[auto_select()]
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown eval backend {name!r}; registered: "
+                         f"{available_backends()}") from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def auto_select() -> str:
+    """Backend auto-selection: `pallas` when running on TPU (the fused
+    VMEM-resident kernel is the point of that hardware), `jnp` everywhere
+    else (Pallas interpret mode is a validation tool, not a fast path).
+    `scalar` is never auto-selected — it exists to be measured against."""
+    import jax
+
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# --- built-in backends --------------------------------------------------------
+
+
+def _jnp_evaluate(op, arg, X, const_table, tree_spec):
+    from repro.core.eval import evaluate_population
+
+    return evaluate_population(op, arg, X, const_table, tree_spec)
+
+
+def _jnp_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, data_tile=1024):
+    from repro.kernels.ref import fitness_ref_tiled
+
+    return fitness_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec)
+
+
+def _pallas_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, data_tile=1024):
+    from repro.kernels import ops as kops
+
+    return kops.fitness(op, arg, X, y, const_table, tree_spec, fit_spec,
+                        data_tile=data_tile)
+
+
+def _scalar_evaluate(op, arg, X, const_table, tree_spec):
+    from repro.core.scalar_eval import evaluate_population_scalar
+
+    X_rows = np.ascontiguousarray(np.asarray(X, np.float32).T)  # [F,D] -> [D,F]
+    return evaluate_population_scalar(np.asarray(op), np.asarray(arg),
+                                      X_rows, np.asarray(const_table))
+
+
+def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, data_tile=1024):
+    from repro.core.scalar_eval import fitness_scalar
+
+    X_rows = np.ascontiguousarray(np.asarray(X, np.float32).T)
+    return fitness_scalar(np.asarray(op), np.asarray(arg), X_rows,
+                          np.asarray(y), np.asarray(const_table),
+                          kernel=fit_spec.kernel, n_classes=fit_spec.n_classes,
+                          precision=fit_spec.precision)
+
+
+register_backend(EvalBackend(
+    name="jnp", evaluate=_jnp_evaluate, fitness=_jnp_fitness,
+    description="vectorized XLA level-sweep (paper's *-CPU_TF)"))
+register_backend(EvalBackend(
+    name="pallas", evaluate=_jnp_evaluate, fitness=_pallas_fitness,
+    fused_fitness=True,
+    description="fused eval+fitness Pallas TPU kernel (interpret off-TPU)"))
+register_backend(EvalBackend(
+    name="scalar", evaluate=_scalar_evaluate, fitness=_scalar_fitness,
+    jittable=False, supports_topology=False,
+    description="paper-faithful per-data-point interpreter (1-CPU_SP)"))

@@ -1,0 +1,111 @@
+"""sklearn-style facades over GPSession.
+
+`SymbolicRegressor` / `SymbolicClassifier` follow the estimator protocol
+(constructor holds hyper-parameters; `fit`/`predict`/`score`; fitted
+attributes carry a trailing underscore; `warm_start=True` continues
+evolving the previous population on the next `fit`). They are thin: all
+execution — backends, topologies, checkpointing — is the session's.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.gp.session import GPSession
+
+
+class _SymbolicBase:
+    _kernel = "r"
+
+    def __init__(self, *, pop_size: int = 100, generations: int = 30,
+                 max_depth: int = 5, n_consts: int = 8, fn_set=None,
+                 tourn_size: int = 10, elitism: int = 1, parsimony: float = 0.0,
+                 stop_fitness: float | None = None, backend: str | None = None,
+                 topology=None, checkpoint_dir: str | None = None,
+                 random_state: int = 0, warm_start: bool = False):
+        self.pop_size = pop_size
+        self.generations = generations
+        self.max_depth = max_depth
+        self.n_consts = n_consts
+        self.fn_set = fn_set
+        self.tourn_size = tourn_size
+        self.elitism = elitism
+        self.parsimony = parsimony
+        self.stop_fitness = stop_fitness
+        self.backend = backend
+        self.topology = topology
+        self.checkpoint_dir = checkpoint_dir
+        self.random_state = random_state
+        self.warm_start = warm_start
+
+    def _kernel_overrides(self) -> dict:
+        return {"kernel": self._kernel}
+
+    def _make_session(self) -> GPSession:
+        import jax
+
+        overrides = dict(pop_size=self.pop_size, generations=self.generations,
+                         max_depth=self.max_depth, n_consts=self.n_consts,
+                         tourn_size=self.tourn_size, elitism=self.elitism,
+                         parsimony=self.parsimony, stop_fitness=self.stop_fitness,
+                         **self._kernel_overrides())
+        if self.fn_set is not None:
+            overrides["fn_set"] = self.fn_set
+        self._key = jax.random.PRNGKey(self.random_state)
+        return GPSession(backend=self.backend, topology=self.topology,
+                         checkpoint_dir=self.checkpoint_dir, **overrides)
+
+    def fit(self, X, y):
+        cont = self.warm_start and getattr(self, "session_", None) is not None
+        if not cont:
+            self.session_ = self._make_session()
+        self.session_.fit(X, y, key=self._key, warm_start=cont)
+        self.expression_ = self.session_.best_expression()
+        self.best_fitness_ = self.session_.best_fitness
+        self.n_features_in_ = self.session_.config.tree_spec.n_features
+        return self
+
+    def _raw_predict(self, X) -> np.ndarray:
+        if getattr(self, "session_", None) is None:
+            raise ValueError("estimator is not fitted; call fit(X, y) first")
+        return self.session_.predict(X)
+
+
+class SymbolicRegressor(_SymbolicBase):
+    """GP symbolic regression (the paper's (r) kernel by default; pass
+    kernel-capable subclasses or register new FitnessKernels for others)."""
+
+    _kernel = "r"
+
+    def predict(self, X) -> np.ndarray:
+        return self._raw_predict(X)
+
+    def score(self, X, y) -> float:
+        """R² (sklearn's regressor convention)."""
+        y = np.asarray(y, np.float64)
+        pred = np.asarray(self.predict(X), np.float64)
+        ss_res = float(((y - pred) ** 2).sum())
+        ss_tot = float(((y - y.mean()) ** 2).sum())
+        return 1.0 - ss_res / ss_tot if ss_tot > 0 else 0.0
+
+
+class SymbolicClassifier(_SymbolicBase):
+    """GP classification via Karoo's round-and-clip label binning."""
+
+    _kernel = "c"
+
+    def __init__(self, *, n_classes: int = 3, **kw):
+        super().__init__(**kw)
+        self.n_classes = n_classes
+
+    def _kernel_overrides(self) -> dict:
+        return {"kernel": self._kernel, "n_classes": self.n_classes}
+
+    def predict(self, X) -> np.ndarray:
+        from repro.core.fitness import classify_labels
+
+        return np.asarray(classify_labels(
+            np.nan_to_num(self._raw_predict(X)), self.n_classes))
+
+    def score(self, X, y) -> float:
+        """Accuracy (sklearn's classifier convention)."""
+        return float((self.predict(X) == np.asarray(y).astype(np.int64)).mean())

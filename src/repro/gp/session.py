@@ -1,0 +1,353 @@
+"""GPSession — one front door for every GP run shape.
+
+The paper's claim is one algorithm across platforms and five orders of
+magnitude of dataset size; the session makes that a one-line switch:
+
+    from repro.gp import GPSession, MeshTopology
+
+    # single device, auto-selected backend
+    GPSession(pop_size=200, kernel="r").fit(X_rows, y)
+
+    # explicit platform (paper's scalar/vector axis)
+    GPSession(backend="scalar").fit(X_rows, y)      # 1-CPU_SP baseline
+    GPSession(backend="pallas").fit(X_rows, y)      # fused TPU kernel
+
+    # mesh/island run — PartitionSpec plumbing stays internal
+    GPSession(topology=MeshTopology(data=2, model=2, pod=2)).fit(X_rows, y)
+
+The session owns the full lifecycle: data ingestion (`data/loader`
+transposition + device placement), state init/seeding (`core.parse`),
+the generation loop (jitted single-device step, `shard_map` mesh step,
+or host loop for non-jittable backends), early stopping, periodic
+checkpointing (`ckpt/`), and best-tree decoding (`trees.to_string`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import compat
+from repro.core import engine
+from repro.core import evolve as ev
+from repro.core import fitness as fit
+from repro.core import primitives as prim
+from repro.core.engine import GPConfig, GPState
+from repro.core.trees import to_string, tree_sizes
+from repro.data.loader import feature_major
+from repro.gp import backends as _backends
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """Device-mesh shape for a sharded run. `data` shards dataset columns
+    (fitness partials psum-reduce), `model` shards the population, `pod`
+    runs island populations with periodic elite migration."""
+
+    data: int = 1
+    model: int = 1
+    pod: int = 1
+
+    def build(self):
+        from repro.launch.mesh import make_host_mesh
+
+        return make_host_mesh(data=self.data, model=self.model, pod=self.pod)
+
+
+_TREE_KEYS = ("max_depth", "n_features", "n_consts", "fn_set", "p_const", "grow_p_fn")
+_FIT_KEYS = ("kernel", "n_classes", "precision")
+
+
+def make_config(config: GPConfig | None = None, **overrides) -> GPConfig:
+    """GPConfig from flat keyword overrides — tree/fitness sub-spec keys
+    (max_depth, kernel, ...) land on the right nested dataclass, so callers
+    never hand-assemble TreeSpec/FitnessSpec for common runs."""
+    config = config if config is not None else GPConfig()
+    tree_kw = {k: overrides.pop(k) for k in _TREE_KEYS if k in overrides}
+    fit_kw = {k: overrides.pop(k) for k in _FIT_KEYS if k in overrides}
+    fn_set = tree_kw.get("fn_set")
+    if isinstance(fn_set, str):
+        tree_kw["fn_set"] = prim.FunctionSet.make(tuple(fn_set.split(",")))
+    elif isinstance(fn_set, (list, tuple)):
+        tree_kw["fn_set"] = prim.FunctionSet.make(tuple(fn_set))
+    if tree_kw:
+        config = dataclasses.replace(
+            config, tree_spec=dataclasses.replace(config.tree_spec, **tree_kw))
+    if fit_kw:
+        config = dataclasses.replace(
+            config, fitness=dataclasses.replace(config.fitness, **fit_kw))
+    if overrides:
+        config = dataclasses.replace(config, **overrides)
+    return config
+
+
+class GPSession:
+    """Owns one GP run: config + backend + topology + state + loop."""
+
+    def __init__(self, config: GPConfig | None = None, *, backend: str | None = None,
+                 topology: "MeshTopology | object | None" = None,
+                 checkpoint_dir: str | None = None, checkpoint_every: int = 10,
+                 feature_names=None, callback=None, **overrides):
+        explicit_features = (config is not None or "tree_spec" in overrides
+                             or "n_features" in overrides)
+        explicit_impl = config is not None or "eval_impl" in overrides
+        self._cfg = make_config(config, **overrides)
+        if backend is None:
+            backend = self._cfg.eval_impl if explicit_impl else "auto"
+        self._backend = _backends.get_backend(backend)
+        if self._backend.jittable:
+            self._cfg = dataclasses.replace(self._cfg, eval_impl=self._backend.name)
+        self._explicit_features = explicit_features
+        self._topology = topology
+        self._mesh = None
+        self._step_fn = None  # jitted sharded step
+        self._built_for = None  # (cfg, mesh) the jitted step was built for
+        self._specs = None
+        self._X = None
+        self._y = None
+        self.state: GPState | None = None
+        self.history: list[float] = []
+        self.feature_names = list(feature_names) if feature_names else None
+        self._callback = callback
+        self._manager = None
+        if checkpoint_dir:
+            from repro.ckpt.checkpoint import CheckpointManager
+
+            self._manager = CheckpointManager(checkpoint_dir, every=checkpoint_every)
+        if topology is not None and not self._backend.supports_topology:
+            raise ValueError(f"backend {self._backend.name!r} does not support "
+                             f"mesh topologies (host-only)")
+
+    # --- introspection -------------------------------------------------------
+
+    @property
+    def config(self) -> GPConfig:
+        return self._cfg
+
+    @property
+    def backend(self) -> str:
+        return self._backend.name
+
+    @property
+    def generation(self) -> int:
+        return int(self.state.generation) if self.state is not None else 0
+
+    @property
+    def best_fitness(self) -> float:
+        return float(self.state.best_fitness) if self.state is not None else float("inf")
+
+    @property
+    def n_rows(self) -> int:
+        """Data points currently ingested (0 before ingest)."""
+        return 0 if self._y is None else int(self._y.shape[0])
+
+    @property
+    def mesh(self):
+        if self._mesh is None and self._topology is not None:
+            top = self._topology
+            self._mesh = top.build() if isinstance(top, MeshTopology) else top
+        return self._mesh
+
+    def _pod_axis(self):
+        mesh = self.mesh
+        return "pod" if mesh is not None and "pod" in mesh.axis_names else None
+
+    def build_sharded_step(self):
+        """(step_fn, specs) of the mesh generation step — the lowering
+        surface used by launch/dryrun.py; fit() drives it internally."""
+        if self.mesh is None:
+            raise ValueError("build_sharded_step needs a topology= mesh")
+        return engine.sharded_evolve_step(self._cfg, self.mesh,
+                                          pod_axis=self._pod_axis())
+
+    # --- lifecycle -----------------------------------------------------------
+
+    def ingest(self, X, y, *, layout: str = "rows") -> "GPSession":
+        """Load the dataset. layout='rows' is sklearn-style [rows, features]
+        (transposed to the paper's feature-major Eq. 2 form internally);
+        layout='features' accepts already-transposed [features, rows]."""
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        if layout == "rows":
+            X_fm = feature_major(X)
+        elif layout == "features":
+            X_fm = np.ascontiguousarray(X)
+        else:
+            raise ValueError(f"layout must be 'rows' or 'features', got {layout!r}")
+        F, D = X_fm.shape
+        if y.shape != (D,):
+            raise ValueError(f"y shape {y.shape} does not match {D} data points")
+        spec = self._cfg.tree_spec
+        if spec.n_features != F:
+            if self._explicit_features:
+                raise ValueError(f"TreeSpec.n_features={spec.n_features} but the "
+                                 f"dataset has {F} features")
+            self._cfg = dataclasses.replace(
+                self._cfg, tree_spec=dataclasses.replace(spec, n_features=F))
+
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            n_data = self.mesh.shape["data"]
+            if D % n_data:
+                raise ValueError(
+                    f"dataset rows ({D}) must be divisible by the data axis "
+                    f"({n_data}); pad or trim the dataset (the sharded step has "
+                    f"no padding mask — see data/loader.pad_rows)")
+            if self._step_fn is None or self._built_for != (self._cfg, self.mesh):
+                # warm_start refits reuse the jitted program; rebuild only
+                # when the config or mesh actually changed
+                step, self._specs = self.build_sharded_step()
+                with compat.set_mesh(self.mesh):
+                    self._step_fn = jax.jit(step, donate_argnums=(0,))
+                self._built_for = (self._cfg, self.mesh)
+            self._X = jax.device_put(X_fm, NamedSharding(self.mesh, P(None, "data")))
+            self._y = jax.device_put(y, NamedSharding(self.mesh, P("data")))
+        elif self._backend.jittable:
+            self._X = jnp.asarray(X_fm)
+            self._y = jnp.asarray(y)
+        else:
+            self._X, self._y = X_fm, y
+        return self
+
+    def init(self, *, key=None, seeds=None) -> "GPSession":
+        """Fresh state (or checkpoint restore when a checkpoint_dir holds
+        one). `seeds` are expression strings — Karoo's customized seed
+        populations, parsed against the session's TreeSpec."""
+        if self._X is None:
+            raise ValueError("no dataset — call ingest()/fit() first")
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.state = engine.init_state(self._cfg, key, seeds=seeds,
+                                       feature_names=self.feature_names)
+        self.history = []
+        if self._manager is not None:
+            restored, _ = self._manager.restore_latest(like=jax.device_get(self.state))
+            if restored is not None:
+                self.state = jax.tree.map(jnp.asarray, restored)
+        return self
+
+    def step(self) -> GPState:
+        """One generation. Does not synchronize with the device — callers
+        timing the hot loop (benchmarks/) see pure step throughput."""
+        if self.state is None:
+            self.init()
+        if self._step_fn is not None:
+            with compat.set_mesh(self.mesh):
+                self.state = self._step_fn(self.state, self._X, self._y)
+        elif self._backend.jittable:
+            self.state = engine.evolve_step(self._cfg, self.state, self._X, self._y)
+        else:
+            self.state = self._host_step(self.state)
+        return self.state
+
+    def _host_step(self, state: GPState) -> GPState:
+        """Generation loop body for non-jittable (host) backends — same
+        contract as engine.evolve_step, with evaluation on the host."""
+        cfg = self._cfg
+        fitness = np.asarray(self._backend.fitness(
+            np.asarray(state.op), np.asarray(state.arg), self._X, self._y,
+            np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
+            data_tile=cfg.data_tile), np.float32)
+        i = int(fitness.argmin())
+        improved = fitness[i] < float(state.best_fitness)
+        best_op = state.op[i] if improved else state.best_op
+        best_arg = state.arg[i] if improved else state.best_arg
+        best_fit = min(float(fitness[i]), float(state.best_fitness))
+        sel = fitness
+        if cfg.parsimony:
+            sel = fitness + cfg.parsimony * np.asarray(tree_sizes(state.op), np.float32)
+        key, k_next = jax.random.split(state.key)
+        new_op, new_arg = ev.next_generation(
+            k_next, state.op, state.arg, jnp.asarray(sel), cfg.tree_spec, cfg.mix,
+            cfg.tourn_size, cfg.elitism)
+        return GPState(key, new_op, new_arg, jnp.asarray(fitness), best_op, best_arg,
+                       jnp.asarray(best_fit, jnp.float32), state.generation + 1)
+
+    def evolve(self, generations: int | None = None) -> GPState:
+        """Drive `generations` steps (default: config.generations) with
+        checkpointing, callback, and stop_fitness early termination."""
+        if self.state is None:
+            self.init()
+        cfg = self._cfg
+        for g in range(generations if generations is not None else cfg.generations):
+            self.step()
+            best = float(self.state.best_fitness)
+            self.history.append(best)
+            if self._manager is not None:
+                self._manager.maybe_save(self.state, int(self.state.generation))
+            if self._callback is not None:
+                self._callback(g, self.state)
+            if cfg.stop_fitness is not None and best <= cfg.stop_fitness:
+                break
+        if self._manager is not None:
+            self._manager.maybe_save(self.state, int(self.state.generation), force=True)
+            self._manager.wait()
+        return self.state
+
+    def fit(self, X, y, *, layout: str = "rows", generations: int | None = None,
+            key=None, seeds=None, warm_start: bool = False) -> "GPSession":
+        """ingest + init + evolve. With warm_start=True an existing evolved
+        state continues on the new data instead of reinitializing."""
+        self.ingest(X, y, layout=layout)
+        if self.state is None or not warm_start:
+            self.init(key=key, seeds=seeds)
+        self.evolve(generations)
+        return self
+
+    # --- results -------------------------------------------------------------
+
+    def best_expression(self) -> str:
+        self._require_state()
+        return to_string(np.asarray(self.state.best_op),
+                         np.asarray(self.state.best_arg),
+                         feature_names=self.feature_names,
+                         const_table=np.asarray(self._cfg.tree_spec.const_table()))
+
+    def predict(self, X, *, layout: str = "rows") -> np.ndarray:
+        """Best tree evaluated on new data, via this session's backend."""
+        self._require_state()
+        X = np.asarray(X, np.float32)
+        X_fm = feature_major(X) if layout == "rows" else X
+        preds = self._backend.evaluate(
+            jnp.asarray(self.state.best_op)[None], jnp.asarray(self.state.best_arg)[None],
+            jnp.asarray(X_fm), self._cfg.tree_spec.const_table(), self._cfg.tree_spec)
+        return np.asarray(preds)[0]
+
+    def score(self, X, y, *, layout: str = "rows") -> float:
+        """The fitness kernel's human-facing metric of the best tree on
+        (X, y) — fraction correct for classify/match, mean |err| for
+        regression, etc."""
+        preds = self.predict(X, layout=layout)
+        metric = fit.get_kernel(self._cfg.fitness.kernel).metric(
+            jnp.asarray(preds)[None], jnp.asarray(y, jnp.float32), self._cfg.fitness)
+        return float(np.asarray(metric)[0])
+
+    def _require_state(self):
+        if self.state is None:
+            raise ValueError("session has no evolved state — call fit() first")
+
+    # --- dataset convenience -------------------------------------------------
+
+    @classmethod
+    def from_dataset(cls, dataset: str, *, max_rows: int | None = None,
+                     config: GPConfig | None = None, **kw) -> "GPSession":
+        """Session pre-loaded with one of the paper's datasets (data/
+        datasets.py), kernel and function set defaulted from its metadata."""
+        from repro.data.datasets import BY_NAME
+
+        X_rows, y, meta = BY_NAME[dataset]()
+        if max_rows is not None and X_rows.shape[0] > max_rows:
+            X_rows, y = X_rows[:max_rows], y[:max_rows]
+        if config is None:
+            kw.setdefault("name", f"karoo-{dataset}")
+            kw.setdefault("kernel", meta["kernel"])
+            if "n_classes" in meta:
+                kw.setdefault("n_classes", meta["n_classes"])
+            kw.setdefault("fn_set", prim.KITCHEN_SINK if meta["kernel"] == "r"
+                          else prim.CLASSIFY_SET)
+            kw.setdefault("feature_names", meta.get("features"))
+        sess = cls(config, **kw)
+        return sess.ingest(X_rows, y)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import fitness as fit
 from repro.core import primitives as prim
 
 _FN_BASE = 3
@@ -98,20 +99,14 @@ def _eval_fitness_kernel(op_ref, arg_ref, x_ref, y_ref, w_ref, const_ref, out_re
     preds = vals[:, 0]  # [Pb, Db]
 
     # ---- fused fitness partial (w masks out data padding) -------------------
+    # The reduction is the registered FitnessKernel's partial_fitness (pure
+    # jnp, so it traces inside the Pallas body); tile partials accumulate
+    # across the data grid, which is why only decomposable kernels may
+    # reach this path (ops.fitness enforces that).
     y = y_ref[...]  # f32[Db]
     wgt = w_ref[...]  # f32[Db]
-    if kernel == "r":
-        err = jnp.abs(preds - y[None, :])
-        err = jnp.where(wgt[None, :] > 0, err, 0.0)  # mask BEFORE inf-sanitize
-        err = jnp.where(jnp.isnan(err), jnp.inf, err)
-        partial = err.sum(-1)
-    elif kernel == "c":
-        lab = jnp.clip(jnp.round(preds), 0, n_classes - 1)
-        partial = -((lab == y[None, :]) * wgt[None, :]).sum(-1)
-    elif kernel == "m":
-        partial = -((jnp.abs(preds - y[None, :]) <= precision) * wgt[None, :]).sum(-1)
-    else:
-        raise ValueError(kernel)
+    spec = fit.FitnessSpec(kernel, n_classes=n_classes, precision=precision)
+    partial = fit.get_kernel(kernel).partial_fitness(preds, y, wgt, spec)
 
     # accumulate across data tiles (innermost grid dim revisits out block)
     @pl.when(j == 0)

@@ -51,7 +51,11 @@ def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSp
             *, data_tile: int = 1024, pop_tile: int = 8, gather: str | None = None,
             impl: str = "pallas", interpret: bool | None = None):
     """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D])."""
-    if impl == "jnp":
+    from repro.core.fitness import get_kernel
+
+    if impl == "jnp" or not get_kernel(fit_spec.kernel).decomposable:
+        # non-decomposable kernels (e.g. pearson) can't accumulate partials
+        # across the Pallas data grid — serve them from the reference path
         return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec)
 
     P, N = op.shape

@@ -15,33 +15,28 @@ from repro.core.trees import TreeSpec
 
 def fitness_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
                 weight=None):
-    """f32[P] fitness (minimize); weight masks out padded data points."""
+    """f32[P] fitness (minimize); weight masks out padded data points.
+    The reduction itself is the registered FitnessKernel's — this function
+    only supplies the reference evaluator's predictions."""
     preds = evaluate_population(op, arg, X, const_table, tree_spec)  # [P, D]
-    y = y.astype(jnp.float32)
-    w = jnp.ones_like(y) if weight is None else weight.astype(jnp.float32)
-    if fit_spec.kernel == "r":
-        err = jnp.abs(preds - y[None, :])
-        err = jnp.where(w[None, :] > 0, err, 0.0)  # mask BEFORE inf-sanitize
-        err = jnp.where(jnp.isnan(err), jnp.inf, err)
-        return err.sum(-1)
-    if fit_spec.kernel == "c":
-        lab = jnp.clip(jnp.round(preds), 0, fit_spec.n_classes - 1)
-        return -((lab == y[None, :]) * w[None, :]).sum(-1)
-    if fit_spec.kernel == "m":
-        return -((jnp.abs(preds - y[None, :]) <= fit_spec.precision) * w[None, :]).sum(-1)
-    raise ValueError(fit_spec.kernel)
+    from repro.core.fitness import fitness_from_preds
+
+    return fitness_from_preds(preds, y, fit_spec, weight=weight)
 
 
 def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
                       fit_spec: FitnessSpec, tile: int = 65536):
     """Same contract, but scans the data dimension in tiles so the
     [pop, nodes, data] evaluation buffer never exceeds one tile — the jnp
-    analogue of the Pallas kernel's VMEM tiling (the fitness kernels are
-    all sum-decomposable over data)."""
+    analogue of the Pallas kernel's VMEM tiling. Kernels that are not
+    sum-decomposable over data (FitnessKernel.decomposable=False) fall
+    back to the un-tiled path."""
     import jax
 
+    from repro.core.fitness import get_kernel
+
     D = X.shape[1]
-    if D <= tile:
+    if D <= tile or not get_kernel(fit_spec.kernel).decomposable:
         return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec)
     pad = (-D) % tile
     w = jnp.ones((D,), jnp.float32)

@@ -25,6 +25,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import all_arch_names, get_config
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.launch import sharding as SH
@@ -107,7 +108,7 @@ def lower_cell(cfg, shape_name: str, mesh):
         state_sds = SH.named(mesh, state_specs, state_shapes)
         batch_sds = SH.named(mesh, SH.batch_specs(cfg, specs), specs)
         step = Md.make_train_step(cfg, opt, param_specs=state_specs["params"])
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             metric_shapes = jax.eval_shape(step, state_shapes, specs)[1]
             out_shardings = (
                 jax.tree.map(lambda s: SH.NamedSharding(mesh, s), state_specs),
@@ -130,7 +131,7 @@ def lower_cell(cfg, shape_name: str, mesh):
         def prefill_fn(p, b):
             return Md.prefill(cfg, p, b, max_len=S)
 
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             out_shardings = (SH.NamedSharding(mesh, logits_spec),
                              jax.tree.map(lambda s: SH.NamedSharding(mesh, s), cache_out))
             return jax.jit(prefill_fn, out_shardings=out_shardings).lower(
@@ -145,7 +146,7 @@ def lower_cell(cfg, shape_name: str, mesh):
                                           specs["token"]), specs["token"])
     len_sds = specs["cur_len"]
     step = Md.make_serve_step(cfg)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         # pinning cache out_shardings == in_shardings lets donation alias the
         # cache buffers (decode must be in-place at 100+ GB caches)
         long_logits = (SH.P(None, None, "model")
@@ -162,7 +163,7 @@ def analyze(lowered, *, want_hlo: bool = False) -> dict:
     compiled = lowered.compile()
     dt = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     rec = {
@@ -226,15 +227,16 @@ GP_CELLS = {
 
 def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False,
                 eval_impl: str = "jnp") -> dict:
-    from repro.core import GPConfig, GPState, TreeSpec, FitnessSpec, sharded_evolve_step
+    from repro.core import GPState
+    from repro.gp import GPSession
 
     pop, F, rows, kern = GP_CELLS[name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    spec = TreeSpec(max_depth=5, n_features=F, n_consts=8)
-    cfg = GPConfig(name=name, pop_size=pop, tree_spec=spec,
-                   fitness=FitnessSpec(kern), eval_impl=eval_impl)
-    step, specs = sharded_evolve_step(cfg, mesh,
-                                      pod_axis="pod" if multi_pod else None)
+    sess = GPSession(name=name, pop_size=pop, max_depth=5, n_features=F,
+                     n_consts=8, kernel=kern, backend=eval_impl, topology=mesh)
+    cfg = sess.config
+    spec = cfg.tree_spec
+    step, specs = sess.build_sharded_step()
     N = spec.num_nodes
     sds = jax.ShapeDtypeStruct
     state_shapes = GPState(
@@ -246,7 +248,7 @@ def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False
     X_sds = SH.named(mesh, specs["X"], sds((F, rows), jnp.float32))
     y_sds = SH.named(mesh, specs["y"], sds((rows,), jnp.float32))
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             lowered = jax.jit(step, donate_argnums=(0,)).lower(state_sds, X_sds, y_sds)
         rec = {"arch": name, "shape": f"pop{pop}_rows{rows}_F{F}",
                "multi_pod": multi_pod, "status": "ok",

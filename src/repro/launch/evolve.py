@@ -1,10 +1,15 @@
-"""GP evolution driver — the paper's workload, end to end.
+"""GP evolution driver — the paper's workload, end to end, via repro.gp.
 
 Mirrors Karoo GP's server interface (§2.2 "scriptable runs via
 command-line arguments") and its per-generation archiving (fx_archive_):
 
     PYTHONPATH=src python -m repro.launch.evolve --dataset kepler \
-        --generations 30 --pop 100 --impl pallas --archive /tmp/karoo
+        --generations 30 --pop 100 --backend pallas --archive /tmp/karoo
+
+Mesh/island runs ride the same door (requires that many local devices,
+e.g. under --xla_force_host_platform_device_count):
+
+    ... --mesh data=2,model=2,pod=2
 """
 from __future__ import annotations
 
@@ -14,77 +19,61 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-
-def jnp_asarray(a):
-    return jnp.asarray(a)
-
-from repro.core import GPConfig, TreeSpec, FitnessSpec, init_state, evolve_step
-from repro.core import primitives as prim
-from repro.core.trees import to_string
 from repro.data.datasets import BY_NAME
-from repro.data.loader import feature_major
+from repro.gp import GPSession, MeshTopology
+
+
+def parse_mesh(spec: str | None) -> MeshTopology | None:
+    """'data=2,model=2[,pod=2]' → MeshTopology."""
+    if not spec:
+        return None
+    kw = {}
+    for part in spec.split(","):
+        k, _, v = part.partition("=")
+        kw[k.strip()] = int(v)
+    return MeshTopology(**kw)
 
 
 def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
-                depth: int = 5, impl: str = "jnp", fn_set: str = "auto",
+                depth: int = 5, backend: str = "jnp", fn_set: str = "auto",
+                topology: MeshTopology | None = None,
                 archive: str | None = None, seed: int = 0, log=print,
                 ckpt_dir: str | None = None, ckpt_every: int = 10,
                 seeds=None):
-    X_rows, y, meta = BY_NAME[name]()
-    F = X_rows.shape[1]
-    if fn_set == "auto":
-        fset = prim.KITCHEN_SINK if name == "kepler" else prim.CLASSIFY_SET
-    else:
-        fset = prim.FunctionSet.make(fn_set.split(","))
-    spec = TreeSpec(max_depth=depth, n_features=F, n_consts=8, fn_set=fset)
-    cfg = GPConfig(name=f"karoo-{name}", pop_size=pop, tree_spec=spec,
-                   fitness=FitnessSpec(meta["kernel"],
-                                       n_classes=meta.get("n_classes", 3)),
-                   generations=generations, eval_impl=impl)
-    X = feature_major(X_rows)
-    state = init_state(cfg, jax.random.PRNGKey(seed), seeds=seeds)
-    manager = None
-    start_gen = 0
-    if ckpt_dir:
-        from repro.ckpt.checkpoint import CheckpointManager
-
-        manager = CheckpointManager(ckpt_dir, every=ckpt_every)
-        restored, g0 = manager.restore_latest(like=jax.device_get(state))
-        if restored is not None:
-            state = jax.tree.map(jnp_asarray, restored)
-            start_gen = int(g0)
-            log(f"resumed from generation {start_gen}")
-    consts = np.asarray(spec.const_table())
-    t0 = time.time()
+    """One archived GP run on a named dataset through the GPSession door."""
+    kw = dict(pop_size=pop, max_depth=depth, n_consts=8, generations=generations,
+              backend=backend, topology=topology,
+              checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every)
+    if fn_set != "auto":
+        kw["fn_set"] = fn_set
     history = []
-    for g in range(start_gen, generations):
-        state = evolve_step(cfg, state, X, y)
-        if manager:
-            manager.maybe_save(state, g + 1)
+
+    def archive_gen(_, state):
+        g = int(state.generation) - 1  # absolute index, stable across resumes
         best = float(state.best_fitness)
         history.append(best)
         if archive:
             os.makedirs(archive, exist_ok=True)
             rec = {"generation": g, "best_fitness": best,
-                   "best_tree": to_string(np.asarray(state.best_op),
-                                          np.asarray(state.best_arg),
-                                          const_table=consts),
+                   "best_tree": sess.best_expression(),
                    "population_fitness": np.asarray(state.fitness).tolist()}
             with open(os.path.join(archive, f"gen_{g:04d}.json"), "w") as f:
                 json.dump(rec, f)
         if g % 5 == 0 or g == generations - 1:
             log(f"gen {g:3d} best_fitness {best:.5f}")
-    if manager:
-        manager.maybe_save(state, generations, force=True)
-        manager.wait()
+
+    sess = GPSession.from_dataset(name, callback=archive_gen, **kw)
+    sess.init(key=jax.random.PRNGKey(seed), seeds=seeds)
+    if sess.generation:
+        log(f"resumed from generation {sess.generation}")
+    t0 = time.time()
+    sess.evolve(max(0, generations - sess.generation))
     wall = time.time() - t0
-    tree = to_string(np.asarray(state.best_op), np.asarray(state.best_arg),
-                     const_table=consts)
+    tree = sess.best_expression()
     log(f"[{name}] {generations} generations in {wall:.2f}s — best: {tree}")
-    return state, wall, history
+    return sess.state, wall, history
 
 
 def main():
@@ -93,7 +82,10 @@ def main():
     ap.add_argument("--generations", type=int, default=30)
     ap.add_argument("--pop", type=int, default=100)
     ap.add_argument("--depth", type=int, default=5)
-    ap.add_argument("--impl", default="jnp", choices=("jnp", "pallas"))
+    ap.add_argument("--backend", "--impl", dest="backend", default="jnp",
+                    help="eval backend: scalar | jnp | pallas | auto")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh topology, e.g. data=2,model=2,pod=2")
     ap.add_argument("--archive", default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -101,7 +93,8 @@ def main():
                     help="seed population expressions, e.g. '(x0 * x1)'")
     args = ap.parse_args()
     run_dataset(args.dataset, generations=args.generations, pop=args.pop,
-                depth=args.depth, impl=args.impl, archive=args.archive,
+                depth=args.depth, backend=args.backend,
+                topology=parse_mesh(args.mesh), archive=args.archive,
                 seed=args.seed, ckpt_dir=args.ckpt_dir, seeds=args.seed_exprs)
 
 

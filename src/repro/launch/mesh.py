@@ -11,24 +11,21 @@ Axes:
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1, pod: int = 1):
     """Small mesh over however many (fake) devices the host exposes —
     used by integration tests."""
     if pod > 1:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.layers import dense_init
 
 
@@ -165,11 +166,10 @@ def moe_apply_sharded(p, x, *, top_k: int, act: str = "silu",
     wspec = P(model_ax, fs, None)
     xspec = (P(batch_axes, model_ax, None) if seq_sharded
              else P(batch_axes, None, None))
-    out_y, aux = jax.shard_map(
+    out_y, aux = compat.shard_map(
         block,
         in_specs=(xspec, P(None, None), wspec, wspec, wspec),
         out_specs=(xspec, P()),
-        check_vma=False,
     )(x, p["router"], _pad_e(p["w_up"], E_pad),
       _pad_e(p.get("w_gate"), E_pad) if gated else _zero_like_up(p, E_pad),
       _pad_e(p["w_down"], E_pad))

@@ -70,6 +70,7 @@ _ELASTIC = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.configs import get_reduced
     from repro.launch.mesh import make_host_mesh, batch_axes
+    from repro import compat
     from repro.launch import sharding as SH
     from repro.models import model as Md
     from repro.models.transformer import ShardingPolicy
@@ -98,7 +99,7 @@ _ELASTIC = textwrap.dedent("""
         step = jax.jit(Md.make_train_step(cfg_b, opt, param_specs=specs["params"]))
         toks = jnp.zeros((4, 16), jnp.int32)
         batch = {"tokens": toks, "labels": toks, "mask": jnp.ones((4,16), jnp.float32)}
-        with jax.set_mesh(mesh_b):
+        with compat.set_mesh(mesh_b):
             state_b2, m = step(state_b, batch)
         assert np.isfinite(float(m["loss"]))
     print("ELASTIC_OK")

@@ -1,0 +1,267 @@
+"""repro.gp public API: backend parity across the registry, fitness-kernel
+registration/dispatch (incl. NaN sanitization), GPSession front door,
+topology subprocess run, and the core.run deprecation shim."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fitness as fit
+from repro.core.trees import TreeSpec, generate_population
+from repro.data.datasets import iris, kepler
+from repro.gp import (
+    FitnessKernel, FitnessSpec, GPSession, MeshTopology, SymbolicClassifier,
+    SymbolicRegressor, available_backends, available_kernels, get_backend,
+    register_kernel,
+)
+
+
+@pytest.fixture(scope="module")
+def fixed_population():
+    spec = TreeSpec(max_depth=4, n_features=4, n_consts=8)
+    op, arg = generate_population(jax.random.PRNGKey(3), 24, spec)
+    X_rows, y, _ = iris()
+    X_rows, y = X_rows[:64], y[:64]
+    X = np.ascontiguousarray(X_rows.T)
+    return spec, op, arg, X, y
+
+
+# --- backend parity ----------------------------------------------------------
+
+
+def test_backend_registry_contents():
+    assert {"scalar", "jnp", "pallas"} <= set(available_backends())
+    assert get_backend("scalar").jittable is False
+    assert get_backend("pallas").fused_fitness is True
+    with pytest.raises(ValueError, match="unknown eval backend"):
+        get_backend("cuda")
+
+
+@pytest.mark.parametrize("kernel", ["r", "c", "m", "mse"])
+def test_backend_parity_on_fixed_population(fixed_population, kernel):
+    """scalar, jnp and pallas(interpret) must agree on fitness for the same
+    population — the paper's claim that platforms differ only in speed."""
+    spec, op, arg, X, y = fixed_population
+    fs = FitnessSpec(kernel, n_classes=3, precision=0.5)
+    consts = np.asarray(spec.const_table())
+    results = {
+        name: np.asarray(get_backend(name).fitness(op, arg, X, y, consts, spec, fs))
+        for name in ("scalar", "jnp", "pallas")
+    }
+    np.testing.assert_allclose(results["jnp"], results["scalar"], rtol=1e-5,
+                               atol=1e-4)
+    np.testing.assert_allclose(results["jnp"], results["pallas"], rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_backend_parity_with_nan_data(fixed_population):
+    """A NaN data point must poison the same trees to +inf on every backend."""
+    spec, op, arg, X, y = fixed_population
+    Xn = X.copy()
+    Xn[:, 7] = np.nan
+    consts = np.asarray(spec.const_table())
+    for kernel in ("r", "c", "m"):
+        fs = FitnessSpec(kernel, n_classes=3)
+        outs = [np.asarray(get_backend(n).fitness(op, arg, Xn, y, consts, spec, fs))
+                for n in ("scalar", "jnp", "pallas")]
+        assert np.isinf(outs[0]).any(), f"{kernel}: NaN point never poisoned a tree"
+        for o in outs[1:]:
+            np.testing.assert_array_equal(np.isinf(o), np.isinf(outs[0]))
+
+
+# --- fitness-kernel registry -------------------------------------------------
+
+
+def test_kernel_registry_contents():
+    assert {"r", "c", "m", "mse", "pearson"} <= set(available_kernels())
+    assert fit.get_kernel("regression") is fit.get_kernel("r")  # alias
+    with pytest.raises(ValueError, match="unknown fitness kernel"):
+        fit.get_kernel("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_kernel(FitnessKernel(name="r", partial_fitness=None, metric=None))
+
+
+def test_nan_never_wins_any_kernel():
+    """round(NaN)→int is undefined; every built-in kernel must sanitize a
+    NaN tree to worst fitness so it can never win a tournament. (Fixed
+    list, not available_kernels(): other tests register demo kernels that
+    make no NaN promise.)"""
+    preds = jnp.asarray([[0.0, 1.0, 2.0], [jnp.nan, 1.0, 2.0]])
+    y = jnp.asarray([0.0, 1.0, 2.0])
+    for kernel in ("r", "c", "m", "mse", "pearson"):
+        f = np.asarray(fit.fitness_from_preds(preds, y, FitnessSpec(kernel)))
+        assert np.isinf(f[1]), f"{kernel}: NaN tree got fitness {f[1]}"
+        assert f[0] < f[1], f"{kernel}: NaN tree would win a tournament"
+
+
+def test_nan_on_padded_points_is_ignored():
+    preds = jnp.asarray([[1.0, jnp.nan]])
+    y = jnp.asarray([1.0, 0.0])
+    w = jnp.asarray([1.0, 0.0])  # NaN only on the padded point
+    for kernel in ("r", "c", "m", "mse"):
+        f = np.asarray(fit.fitness_from_preds(preds, y, FitnessSpec(kernel), weight=w))
+        assert np.isfinite(f[0]), f"{kernel}: padding NaN leaked into fitness"
+
+
+def test_custom_kernel_plugs_into_engine():
+    """A user kernel registers once and is reachable from selection code
+    (evolve_step) without touching it — the registry's reason to exist."""
+    name = "test-hinge"
+    if name not in available_kernels():
+        register_kernel(FitnessKernel(
+            name=name,
+            partial_fitness=lambda p, y, w, spec: (
+                jnp.where(w[None, :] > 0, jnp.maximum(0.0, 1.0 - p * y[None, :]), 0.0)
+                .sum(-1)),
+            metric=lambda p, y, spec: jnp.maximum(0.0, 1.0 - p * y[None, :]).mean(-1)))
+    X_rows, y, _ = kepler()
+    sess = GPSession(pop_size=16, generations=2, kernel=name, backend="jnp")
+    sess.fit(X_rows, y)
+    assert np.isfinite(sess.best_fitness)
+    assert len(sess.history) == 2
+
+
+def test_non_decomposable_kernel_rejected_on_mesh():
+    from repro.core.engine import GPConfig, sharded_evolve_step
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = GPConfig(pop_size=8, fitness=FitnessSpec("pearson"))
+    mesh = make_host_mesh(data=1, model=1)
+    with pytest.raises(ValueError, match="not sum-decomposable"):
+        sharded_evolve_step(cfg, mesh)
+
+
+# --- GPSession front door ----------------------------------------------------
+
+
+def test_session_backend_switch_is_one_string():
+    """The acceptance bar: switching backends requires no other change."""
+    X_rows, y, _ = iris()
+    results = {}
+    for backend in ("jnp", "pallas"):
+        s = GPSession(pop_size=40, generations=4, max_depth=4, kernel="c",
+                      n_classes=3, backend=backend)
+        s.fit(X_rows, y, key=jax.random.PRNGKey(5))
+        results[backend] = s.best_fitness
+    assert results["jnp"] == pytest.approx(results["pallas"], abs=1e-3)
+
+
+def test_session_scalar_backend_same_door():
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=12, generations=2, kernel="r", backend="scalar")
+    s.fit(X_rows, y)
+    assert s.generation == 2 and len(s.history) == 2
+    assert np.isfinite(s.best_fitness)
+
+
+def test_session_results_api():
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=60, generations=8, kernel="r",
+                  feature_names=["r"])
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    expr = s.best_expression()
+    assert "r" in expr or expr.replace(".", "").replace("-", "").isdigit()
+    preds = s.predict(X_rows)
+    assert preds.shape == y.shape
+    assert s.score(X_rows, y) >= 0.0  # mean |err|
+    # warm start continues instead of resetting
+    g0 = s.generation
+    s.fit(X_rows, y, generations=2, warm_start=True)
+    assert s.generation == g0 + 2
+
+
+def test_session_rejects_feature_mismatch():
+    X_rows, y, _ = iris()
+    s = GPSession(pop_size=8, generations=1, n_features=2)
+    with pytest.raises(ValueError, match="n_features"):
+        s.ingest(X_rows, y)
+
+
+def test_session_rejects_scalar_topology():
+    with pytest.raises(ValueError, match="host-only"):
+        GPSession(backend="scalar", topology=MeshTopology(data=1))
+
+
+def test_core_run_forwards_with_deprecation():
+    from repro.core import FitnessSpec as FS
+    from repro.core import GPConfig, TreeSpec, run
+
+    X_rows, y, _ = kepler()
+    X = np.ascontiguousarray(X_rows.T)
+    cfg = GPConfig(pop_size=30, generations=3,
+                   tree_spec=TreeSpec(max_depth=4, n_features=1),
+                   fitness=FS("r"))
+    with pytest.warns(DeprecationWarning, match="GPSession"):
+        state = run(cfg, X, y, key=jax.random.PRNGKey(7))
+    sess = GPSession(cfg)
+    sess.ingest(X, y, layout="features")
+    sess.init(key=jax.random.PRNGKey(7))
+    sess.evolve()
+    assert float(state.best_fitness) == float(sess.state.best_fitness)
+
+
+def test_estimators_sklearn_protocol():
+    X_rows, y, _ = kepler()
+    reg = SymbolicRegressor(pop_size=60, generations=8,
+                            fn_set=("add", "sub", "mul", "div", "sqrt", "square"))
+    reg.fit(X_rows, y)
+    assert reg.score(X_rows, y) > 0.5
+    assert isinstance(reg.expression_, str)
+    Xc, yc, _ = iris()
+    clf = SymbolicClassifier(n_classes=3, pop_size=40, generations=4)
+    clf.fit(Xc, yc)
+    labels = clf.predict(Xc)
+    assert set(np.unique(labels)) <= {0, 1, 2}
+    assert clf.score(Xc, yc) > 1 / 3
+
+
+# --- topology (multi-device → subprocess) ------------------------------------
+
+_SUBPROCESS_TOPOLOGY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.gp import GPSession, MeshTopology
+
+    rng = np.random.RandomState(1)
+    X_rows = np.abs(rng.randn(128, 2)).astype(np.float32) + 0.5
+    y = (X_rows[:, 0] ** 2 / X_rows[:, 1]).astype(np.float32)
+
+    # island (pod) topology — same fit() call as single-device
+    s = GPSession(pop_size=64, generations=12, kernel="r", migrate_every=3,
+                  topology=MeshTopology(data=2, model=2, pod=2))
+    s.fit(X_rows, y)
+    assert np.isfinite(s.best_fitness), s.best_fitness
+    assert s.generation == 12, s.generation
+    assert len(s.best_expression()) > 0
+
+    # flat 2D mesh
+    s2 = GPSession(pop_size=64, generations=6, kernel="r",
+                   topology=MeshTopology(data=4, model=2))
+    s2.fit(X_rows, y)
+    assert np.isfinite(s2.best_fitness)
+
+    # indivisible rows fail loudly, not silently wrong
+    try:
+        GPSession(pop_size=64, kernel="r",
+                  topology=MeshTopology(data=4, model=2)).ingest(X_rows[:126], y[:126])
+    except ValueError as e:
+        assert "divisible" in str(e), e
+    else:
+        raise AssertionError("expected ValueError for indivisible rows")
+    print("TOPOLOGY_OK")
+""")
+
+
+def test_session_topology_subprocess():
+    env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_TOPOLOGY], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "TOPOLOGY_OK" in r.stdout
