@@ -1,0 +1,86 @@
+"""Loop-throughput smoke benchmark — the perf-trajectory seed for CI.
+
+Times the device-resident generation loop (one `lax.scan` evolution
+block per dispatch) on the jnp backend over a fixed synthetic dataset at
+the paper's 875x scale point (KAT-7 shape, 90,000 rows) with a pop=256
+population, and writes `BENCH_loop.json` so every CI run leaves a
+comparable generations/sec artifact:
+
+    PYTHONPATH=src python benchmarks/smoke_bench.py --out BENCH_loop.json
+
+The numbers are NOT cross-machine comparable (CI runners vary); the
+artifact records the machine-free quantities too (generations, rows,
+pop, host syncs) so a trajectory can be assembled from like runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from repro.data.datasets import kat7
+from repro.gp import GPSession
+
+# the paper's 875x axis: KAT-7 shape at 90k rows (§3.5, Fig. 3)
+ROWS = 90_000
+POP = 256
+GENS = 10
+
+
+def bench_loop(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
+               depth: int = 5, seed: int = 0) -> dict:
+    X_rows, y, meta = kat7(rows=rows)
+    sess = GPSession(pop_size=pop, max_depth=depth, n_consts=8,
+                     kernel=meta["kernel"], n_classes=meta["n_classes"],
+                     backend="jnp", generations=gens)
+    sess.ingest(X_rows, y)
+    sess.init(key=jax.random.PRNGKey(seed))
+
+    t0 = time.perf_counter()
+    sess.evolve_block(gens)  # includes compile
+    jax.block_until_ready(sess.state.fitness)
+    compile_and_run_s = time.perf_counter() - t0
+
+    sess.init(key=jax.random.PRNGKey(seed))
+    t0 = time.perf_counter()
+    _, history = sess.evolve_block(gens)
+    jax.block_until_ready(history)
+    run_s = time.perf_counter() - t0
+
+    return {
+        "bench": "loop",
+        "backend": "jnp",
+        "pop": pop,
+        "rows": rows,
+        "depth": depth,
+        "generations": gens,
+        "block_dispatches": 1,
+        "host_syncs_per_block": 1,
+        "warm_s": round(run_s, 4),
+        "cold_s": round(compile_and_run_s, 4),
+        "generations_per_sec": round(gens / run_s, 4),
+        "rows_evals_per_sec": round(gens * pop * rows / run_s, 1),
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pop", type=int, default=POP)
+    ap.add_argument("--rows", type=int, default=ROWS)
+    ap.add_argument("--gens", type=int, default=GENS)
+    ap.add_argument("--out", default="BENCH_loop.json")
+    args = ap.parse_args()
+    rec = bench_loop(pop=args.pop, rows=args.rows, gens=args.gens)
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,10 @@
 Tensorized tree populations, vectorized evaluation, fitness kernels,
 jittable genetic operators, and the sharded generation step.
 """
-from repro.core.engine import GPConfig, GPState, evolve_step, init_state, run, sharded_evolve_step  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    GPConfig, GPState, evolve_block, evolve_step, init_state, run,
+    sharded_evolve_block, sharded_evolve_step,
+)
 from repro.core.fitness import (  # noqa: F401
     FitnessKernel, FitnessSpec, available_kernels, get_kernel, register_kernel,
 )

@@ -2,8 +2,13 @@
 
 Workflow (paper §2.4): build population → evaluate fitness → select →
 apply genetic operators → repeat. Step 2 is the parallel hot spot; here it
-is one jitted program per generation, and under `shard_map` it distributes
-as:
+is one jitted program per generation (`evolve_step`), or — the device-
+resident fast path — one jitted program per K-generation *evolution
+block* (`evolve_block` / `sharded_evolve_block`): a `lax.scan` over the
+same step body, early stop as a branch-free on-device freeze, and the
+per-generation best-fitness stream returned as a [K] array so the host
+synchronizes once per block instead of once per generation. Under
+`shard_map` the step distributes as:
 
     data axis   : dataset columns sharded; per-tree fitness partials are
                   `psum`-reduced (the paper's vectorized-evaluation axis)
@@ -70,10 +75,11 @@ class GPState(NamedTuple):
     generation: jax.Array  # int32[]
 
 
-def _eval_fitness(cfg: GPConfig, op, arg, X, y, const_table):
+def _eval_fitness(cfg: GPConfig, op, arg, X, y, weight, const_table):
     """Dispatch to the EvalBackend registered under `cfg.eval_impl`
     (repro.gp.backends — pallas fused kernel, jnp tiled reference, or any
-    user-registered jittable backend)."""
+    user-registered jittable backend). `weight` is the dataset-padding
+    mask (f32[D], 0.0 on padded points) or None for unpadded data."""
     from repro.gp.backends import get_backend
 
     backend = get_backend(cfg.eval_impl)
@@ -82,7 +88,7 @@ def _eval_fitness(cfg: GPConfig, op, arg, X, y, const_table):
             f"eval backend {backend.name!r} is host-only and cannot run inside "
             f"the jitted generation step; drive it through repro.gp.GPSession")
     return backend.fitness(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
-                           data_tile=cfg.data_tile)
+                           weight=weight, data_tile=cfg.data_tile)
 
 
 def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
@@ -106,11 +112,12 @@ def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
     )
 
 
-@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
-def evolve_step(cfg: GPConfig, state: GPState, X, y) -> GPState:
-    """One generation on a single device. X: [F, D] feature-major, y: [D]."""
+def _step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
+    """One generation's computation — shared verbatim by the per-step jit
+    (`evolve_step`) and the scanned block (`evolve_block`), so K scanned
+    steps are bitwise-identical to K dispatched steps."""
     const_table = cfg.tree_spec.const_table()
-    fitness = _eval_fitness(cfg, state.op, state.arg, X, y, const_table)
+    fitness = _eval_fitness(cfg, state.op, state.arg, X, y, weight, const_table)
     # best tracked on RAW fitness; selection may add parsimony pressure
     i = jnp.argmin(fitness)
     improved = fitness[i] < state.best_fitness
@@ -130,6 +137,62 @@ def evolve_step(cfg: GPConfig, state: GPState, X, y) -> GPState:
         cfg.tourn_size, cfg.elitism)
     return GPState(key, new_op, new_arg, fitness, best_op, best_arg, best_fit,
                    state.generation + 1)
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def evolve_step(cfg: GPConfig, state: GPState, X, y, weight=None) -> GPState:
+    """One generation on a single device. X: [F, D] feature-major, y: [D];
+    `weight` (f32[D] or None) masks dataset-padding points out of fitness."""
+    return _step_body(cfg, state, X, y, weight)
+
+
+def _block_done(cfg: GPConfig, state: GPState, i, limit):
+    """Branch-free freeze predicate for step `i` of a block: True once
+    `best_fitness` has reached `cfg.stop_fitness` (on-device early stop)
+    or `i` has reached the dynamic `limit` (a traced step budget that
+    lets ONE compiled fixed-length block program serve ragged block
+    boundaries — checkpoint/callback phases, final partial blocks —
+    without recompiling per distinct length)."""
+    done = jnp.asarray(False)
+    if cfg.stop_fitness is not None:
+        done = state.best_fitness <= cfg.stop_fitness
+    if limit is not None:
+        done = done | (i >= limit)
+    return done
+
+
+def _freeze(done, prev: GPState, new: GPState) -> GPState:
+    """Carry `prev` through unchanged (PRNG key and generation counter
+    included) when `done` — frozen steps are no-ops, so the host reads
+    how many generations actually ran off `state.generation`."""
+    return jax.tree.map(lambda p, n: jnp.where(done, p, n), prev, new)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_steps"), donate_argnums=(1,))
+def evolve_block(cfg: GPConfig, state: GPState, X, y, weight=None, limit=None, *,
+                 n_steps: int = 1):
+    """Run up to `n_steps` generations in ONE device dispatch via `lax.scan`.
+
+    Returns (state, history) where history is the f32[n_steps] per-
+    generation `best_fitness` stream — the block's metrics ride back with
+    the state instead of forcing a host sync per generation. Steps freeze
+    into no-ops once `cfg.stop_fitness` is reached or the step index hits
+    `limit` (dynamic int32; None = run all `n_steps`), so one compiled
+    program covers every block length ≤ n_steps. The freeze is a
+    branch-free select, not a skip: frozen steps still execute the
+    generation's compute and discard it — callers bound the waste by
+    choosing n_steps (GPSession caps it at the configured period, or
+    _STOP_CHECK_SPAN when only stop_fitness is armed)."""
+
+    def body(s, i):
+        nxt = _step_body(cfg, s, X, y, weight)
+        done = _block_done(cfg, s, i, limit)
+        if cfg.stop_fitness is not None or limit is not None:
+            nxt = _freeze(done, s, nxt)
+        return nxt, nxt.best_fitness
+
+    state, history = jax.lax.scan(body, state, jnp.arange(n_steps))
+    return state, history
 
 
 def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
@@ -153,15 +216,12 @@ def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
 # --- mesh-sharded step --------------------------------------------------------
 
 
-def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="model",
-                        pod_axis: str | None = None):
-    """Build a shard_map'd generation step for `mesh`.
-
-    Shardings: X,y on (data,); the population's leading axis on
-    (pod, model) — the pod slices are the islands, the model slices are
-    a pod's parallel evaluation shards. Returns (step_fn, specs dict)
-    ready for jit/lower. best_* is replicated (global argmin over pods).
-    """
+def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
+                          model_axis="model", pod_axis: str | None = None):
+    """Per-shard generation-step body + its PartitionSpecs — the common
+    core of `sharded_evolve_step` (one step per dispatch) and
+    `sharded_evolve_block` (K steps per dispatch via an in-shard_map
+    scan). Returns (step, state_specs, data_spec, y_spec, w_spec)."""
     from repro.core.islands import migrate
 
     kern = fit.get_kernel(cfg.fitness.kernel)
@@ -181,15 +241,17 @@ def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="mo
     pop_spec = P((*pod_dims, model_axis))
     data_spec = P(None, data_axis)  # X is [F, D]
     y_spec = P(data_axis)
+    w_spec = P(data_axis)  # padding mask rides the same axis as y
     state_specs = GPState(
         key=P(), op=pop_spec, arg=pop_spec, fitness=pop_spec,
         best_op=P(), best_arg=P(), best_fitness=P(), generation=P(),
     )
 
-    def step(state: GPState, X, y) -> GPState:
+    def step(state: GPState, X, y, weight) -> GPState:
         const_table = cfg.tree_spec.const_table()
         # --- evaluate: local pop shard x local data shard; psum over data
-        partial_fit = _eval_fitness(cfg, state.op, state.arg, X, y, const_table)
+        partial_fit = _eval_fitness(cfg, state.op, state.arg, X, y, weight,
+                                    const_table)
         fitness_local = jax.lax.psum(partial_fit, data_axis)
         # --- selection pool = this pod's population: tiny all_gather
         fitness_g = jax.lax.all_gather(fitness_local, model_axis, tiled=True)
@@ -234,9 +296,58 @@ def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="mo
         return GPState(state.key, new_op, new_arg, fitness_local, best_op, best_arg,
                        best_fit, state.generation + 1)
 
+    return step, state_specs, data_spec, y_spec, w_spec
+
+
+def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="model",
+                        pod_axis: str | None = None):
+    """Build a shard_map'd generation step for `mesh`.
+
+    Shardings: X, y, weight on (data,); the population's leading axis on
+    (pod, model) — the pod slices are the islands, the model slices are
+    a pod's parallel evaluation shards. Returns (step_fn, specs dict)
+    ready for jit/lower; step_fn(state, X, y, weight) — weight is the
+    f32[D] dataset-padding mask (all-ones when nothing was padded).
+    best_* is replicated (global argmin over pods).
+    """
+    step, state_specs, data_spec, y_spec, w_spec = _sharded_step_builder(
+        cfg, mesh, data_axis=data_axis, model_axis=model_axis, pod_axis=pod_axis)
     smapped = compat.shard_map(
         step, mesh=mesh,
-        in_specs=(state_specs, data_spec, y_spec),
+        in_specs=(state_specs, data_spec, y_spec, w_spec),
         out_specs=state_specs,
     )
-    return smapped, dict(state=state_specs, X=data_spec, y=y_spec)
+    return smapped, dict(state=state_specs, X=data_spec, y=y_spec, weight=w_spec)
+
+
+def sharded_evolve_block(cfg: GPConfig, mesh, *, n_steps: int, data_axis="data",
+                         model_axis="model", pod_axis: str | None = None):
+    """Build a shard_map'd K-generation evolution block for `mesh`.
+
+    The `lax.scan` lives INSIDE shard_map, so one dispatch runs `n_steps`
+    generations — collectives included — with no host round-trip between
+    them. Early stop follows the same branch-free freeze as the
+    single-device block (`best_fitness` is replicated, so every shard
+    takes the same freeze decision). Returns (block_fn, specs dict);
+    block_fn(state, X, y, weight, limit) -> (state, history f32[n_steps])
+    — `limit` is the replicated dynamic step budget (pass n_steps to run
+    the full block), history replicated (it streams the replicated
+    best_fitness).
+    """
+    step, state_specs, data_spec, y_spec, w_spec = _sharded_step_builder(
+        cfg, mesh, data_axis=data_axis, model_axis=model_axis, pod_axis=pod_axis)
+
+    def block(state: GPState, X, y, weight, limit):
+        def body(s, i):
+            nxt = _freeze(_block_done(cfg, s, i, limit), s, step(s, X, y, weight))
+            return nxt, nxt.best_fitness
+
+        return jax.lax.scan(body, state, jnp.arange(n_steps))
+
+    smapped = compat.shard_map(
+        block, mesh=mesh,
+        in_specs=(state_specs, data_spec, y_spec, w_spec, P()),
+        out_specs=(state_specs, P()),
+    )
+    return smapped, dict(state=state_specs, X=data_spec, y=y_spec, weight=w_spec,
+                         limit=P(), history=P())

@@ -13,6 +13,13 @@ one static XLA program for any population content. This module is the pure
 jnp reference path; kernels/gp_eval.py is the Pallas TPU version of the
 same contraction (fused with the fitness reduction), and kernels/ref.py
 re-exports these functions as the kernel oracle.
+
+Predictions are computed for EVERY data column, padded or not — dataset
+padding (data/loader.pad_rows) is masked one layer up, where the
+`weight: f32[D]` vector zeroes padded points out of the fitness
+reduction (core/fitness partial_fitness, kernels/ref, kernels/ops, and
+the Pallas kernel's w_ref all share that convention), so a padded
+dataset scores exactly like the unpadded one.
 """
 from __future__ import annotations
 

@@ -153,6 +153,12 @@ def next_generation(key, op, arg, fitness, spec: TreeSpec, mix: OperatorMix = Op
     tiny: the <3x redundant work is noise next to evaluation, paper §2.3).
     `n_out` decouples offspring count from parent-pool size so a
     model-axis shard can produce just its slice of the next generation.
+
+    Inside a jitted program (engine step/block) this inlines into the
+    caller's trace. Host loops calling it repeatedly should go through
+    `repro.gp.backends.host_next_generation(spec, mix, tourn_size,
+    elitism)` instead — one cached compiled program per operator
+    configuration, shared across call sites and sessions.
     """
     P = n_out or op.shape[0]
     k_op, k_t1, k_t2, k_x, k_mb, k_mp = jax.random.split(key, 6)

@@ -90,12 +90,17 @@ def evaluate_population_scalar(op, arg, X_rows, const_table) -> np.ndarray:
 
 
 def fitness_scalar(op, arg, X_rows, y, const_table, kernel: str = "r",
-                   n_classes: int = 3, precision: float = 1e-4) -> np.ndarray:
+                   n_classes: int = 3, precision: float = 1e-4,
+                   weight=None) -> np.ndarray:
     """Scalar-evaluated predictions reduced by the registered FitnessKernel
     (the reduction is negligible next to the per-point interpreter; sharing
-    the kernel registry keeps the NaN semantics identical across paths)."""
+    the kernel registry keeps the NaN semantics identical across paths).
+    `weight` masks dataset-padding rows (0.0 = padded), same convention as
+    the vectorized paths."""
     from repro.core.fitness import FitnessSpec, fitness_from_preds
 
     preds = evaluate_population_scalar(op, arg, X_rows, const_table)
     spec = FitnessSpec(kernel, n_classes=n_classes, precision=precision)
-    return np.asarray(fitness_from_preds(preds, np.asarray(y, np.float32), spec))
+    w = None if weight is None else np.asarray(weight, np.float32)
+    return np.asarray(fitness_from_preds(preds, np.asarray(y, np.float32), spec,
+                                         weight=w))

@@ -1,3 +1,5 @@
 """Datasets (paper's four + synthetic LM token streams) and sharded loaders."""
 from repro.data.datasets import iris, kat7, kepler, ligo_glitch  # noqa: F401
-from repro.data.loader import feature_major, lm_batches, shard_dataset  # noqa: F401
+from repro.data.loader import (  # noqa: F401
+    feature_major, lm_batches, pad_feature_major, pad_rows, shard_dataset,
+)

@@ -21,6 +21,9 @@ def feature_major(X_rows: np.ndarray) -> np.ndarray:
 
 
 def pad_rows(X_rows, y, multiple: int):
+    """Pad [rows, ...] data up to a multiple; returns (X, y, weight) where
+    weight is 1.0 on real rows and 0.0 on padding — the mask the fitness
+    kernels use to keep padded datasets scoring exactly."""
     D = X_rows.shape[0]
     pad = (-D) % multiple
     if pad:
@@ -30,14 +33,28 @@ def pad_rows(X_rows, y, multiple: int):
     return X_rows, y, w
 
 
+def pad_feature_major(X_fm, y, multiple: int):
+    """`pad_rows` for already-transposed [features, rows] data: pads the
+    trailing (data) axis. Returns (X [F, D'], y [D'], weight [D'])."""
+    F, D = X_fm.shape
+    pad = (-D) % multiple
+    if pad:
+        X_fm = np.concatenate([X_fm, np.zeros((F, pad), X_fm.dtype)], axis=1)
+        y = np.concatenate([y, np.zeros((pad,), y.dtype)])
+    w = np.concatenate([np.ones(D, np.float32), np.zeros(pad, np.float32)])
+    return np.ascontiguousarray(X_fm), y, w
+
+
 def shard_dataset(X_rows, y, mesh, data_axis: str = "data"):
-    """→ (X [F, D'] , y [D']) device-placed, D' padded to the data axis."""
+    """→ (X [F, D'], y [D'], weight [D']) device-placed, D' padded to the
+    data axis; weight is the padding mask (zero on padded columns)."""
     n = mesh.shape[data_axis]
-    X_rows, y, _ = pad_rows(np.asarray(X_rows, np.float32), np.asarray(y, np.float32), n)
+    X_rows, y, w = pad_rows(np.asarray(X_rows, np.float32), np.asarray(y, np.float32), n)
     X = feature_major(X_rows)
     xs = jax.device_put(X, NamedSharding(mesh, P(None, data_axis)))
     ys = jax.device_put(y, NamedSharding(mesh, P(data_axis)))
-    return xs, ys
+    ws = jax.device_put(w, NamedSharding(mesh, P(data_axis)))
+    return xs, ys, ws
 
 
 def lm_batches(vocab: int, batch: int, seq: int, *, seed: int = 0, n_batches=None):

@@ -19,6 +19,7 @@ here and are immediately reachable from `GPSession(backend=...)`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import numpy as np
@@ -29,11 +30,14 @@ class EvalBackend:
     """One evaluation platform.
 
     evaluate: (op[P,N], arg[P,N], X[F,D], const_table[C], tree_spec) -> preds[P,D]
-    fitness:  (op, arg, X, y, const_table, tree_spec, fit_spec, data_tile) -> f32[P]
+    fitness:  (op, arg, X, y, const_table, tree_spec, fit_spec,
+               weight=None, data_tile=...) -> f32[P]
 
-    `jittable` backends run inside the engine's jitted generation step
-    (and under shard_map on a mesh); host-only backends are driven by
-    GPSession's host generation loop instead.
+    `weight` is an optional f32[D] dataset-padding mask (0.0 on padded
+    points) — every backend must score a padded dataset identically to
+    the unpadded one. `jittable` backends run inside the engine's jitted
+    generation step (and under shard_map on a mesh); host-only backends
+    are driven by GPSession's host generation loop instead.
     """
 
     name: str
@@ -95,17 +99,20 @@ def _jnp_evaluate(op, arg, X, const_table, tree_spec):
     return evaluate_population(op, arg, X, const_table, tree_spec)
 
 
-def _jnp_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, data_tile=1024):
+def _jnp_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
+                 data_tile=1024):
     from repro.kernels.ref import fitness_ref_tiled
 
-    return fitness_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec)
+    return fitness_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec,
+                             weight=weight)
 
 
-def _pallas_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, data_tile=1024):
+def _pallas_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
+                    data_tile=1024):
     from repro.kernels import ops as kops
 
     return kops.fitness(op, arg, X, y, const_table, tree_spec, fit_spec,
-                        data_tile=data_tile)
+                        weight=weight, data_tile=data_tile)
 
 
 def _scalar_evaluate(op, arg, X, const_table, tree_spec):
@@ -116,14 +123,33 @@ def _scalar_evaluate(op, arg, X, const_table, tree_spec):
                                       X_rows, np.asarray(const_table))
 
 
-def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, data_tile=1024):
+def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
+                    data_tile=1024):
     from repro.core.scalar_eval import fitness_scalar
 
     X_rows = np.ascontiguousarray(np.asarray(X, np.float32).T)
     return fitness_scalar(np.asarray(op), np.asarray(arg), X_rows,
                           np.asarray(y), np.asarray(const_table),
                           kernel=fit_spec.kernel, n_classes=fit_spec.n_classes,
-                          precision=fit_spec.precision)
+                          precision=fit_spec.precision,
+                          weight=None if weight is None else np.asarray(weight))
+
+
+@functools.lru_cache(maxsize=64)
+def host_next_generation(tree_spec, mix, tourn_size: int, elitism: int):
+    """One jitted `next_generation` per (spec, mix, tourn_size, elitism),
+    cached across call sites and sessions — the host generation loop
+    (scalar backend) re-enters the SAME compiled program every generation
+    instead of paying a fresh trace per call site."""
+    import jax
+
+    from repro.core import evolve as ev
+
+    def fn(key, op, arg, fitness):
+        return ev.next_generation(key, op, arg, fitness, tree_spec, mix,
+                                  tourn_size, elitism)
+
+    return jax.jit(fn)
 
 
 register_backend(EvalBackend(

@@ -21,7 +21,8 @@ class _SymbolicBase:
                  tourn_size: int = 10, elitism: int = 1, parsimony: float = 0.0,
                  stop_fitness: float | None = None, backend: str | None = None,
                  topology=None, checkpoint_dir: str | None = None,
-                 random_state: int = 0, warm_start: bool = False):
+                 random_state: int = 0, warm_start: bool = False,
+                 block_size: int | None = None):
         self.pop_size = pop_size
         self.generations = generations
         self.max_depth = max_depth
@@ -36,6 +37,9 @@ class _SymbolicBase:
         self.checkpoint_dir = checkpoint_dir
         self.random_state = random_state
         self.warm_start = warm_start
+        # generations per device-resident evolution block (None = whole run
+        # in one dispatch, bounded by the checkpoint period when set)
+        self.block_size = block_size
 
     def _kernel_overrides(self) -> dict:
         return {"kernel": self._kernel}
@@ -52,7 +56,8 @@ class _SymbolicBase:
             overrides["fn_set"] = self.fn_set
         self._key = jax.random.PRNGKey(self.random_state)
         return GPSession(backend=self.backend, topology=self.topology,
-                         checkpoint_dir=self.checkpoint_dir, **overrides)
+                         checkpoint_dir=self.checkpoint_dir,
+                         block_size=self.block_size, **overrides)
 
     def fit(self, X, y):
         cont = self.warm_start and getattr(self, "session_", None) is not None

@@ -16,10 +16,22 @@ magnitude of dataset size; the session makes that a one-line switch:
     GPSession(topology=MeshTopology(data=2, model=2, pod=2)).fit(X_rows, y)
 
 The session owns the full lifecycle: data ingestion (`data/loader`
-transposition + device placement), state init/seeding (`core.parse`),
-the generation loop (jitted single-device step, `shard_map` mesh step,
-or host loop for non-jittable backends), early stopping, periodic
+transposition + padding + device placement), state init/seeding
+(`core.parse`), the generation loop, early stopping, periodic
 checkpointing (`ckpt/`), and best-tree decoding (`trees.to_string`).
+
+The loop is driven in device-resident *evolution blocks*: `evolve()`
+dispatches `engine.evolve_block` (a `lax.scan` over K generations —
+`sharded_evolve_block` on a mesh) and synchronizes with the device once
+per block, reading back the final state plus the [K] per-generation
+best-fitness history. Early stop (`cfg.stop_fitness`) is a branch-free
+on-device freeze checked on the host only at block boundaries; the
+block size is min(checkpoint period, callback period, remaining
+generations), so checkpoints and callbacks still fire exactly when
+configured. Datasets whose row count doesn't divide the mesh's data
+axis are padded (`data/loader.pad_rows`) with a zero-weight mask that
+keeps fitness exact. `session.stats["host_syncs"]` counts the actual
+host synchronizations, pinned by tests to ≤ ⌈generations/K⌉.
 """
 from __future__ import annotations
 
@@ -31,7 +43,6 @@ import numpy as np
 
 from repro import compat
 from repro.core import engine
-from repro.core import evolve as ev
 from repro.core import fitness as fit
 from repro.core import primitives as prim
 from repro.core.engine import GPConfig, GPState
@@ -89,7 +100,8 @@ class GPSession:
     def __init__(self, config: GPConfig | None = None, *, backend: str | None = None,
                  topology: "MeshTopology | object | None" = None,
                  checkpoint_dir: str | None = None, checkpoint_every: int = 10,
-                 feature_names=None, callback=None, **overrides):
+                 feature_names=None, callback=None, callback_every: int = 1,
+                 block_size: int | None = None, **overrides):
         explicit_features = (config is not None or "tree_spec" in overrides
                              or "n_features" in overrides)
         explicit_impl = config is not None or "eval_impl" in overrides
@@ -102,15 +114,23 @@ class GPSession:
         self._explicit_features = explicit_features
         self._topology = topology
         self._mesh = None
-        self._step_fn = None  # jitted sharded step
+        self._step_fn = None  # jitted sharded step (step() contract)
+        self._block_cache = {}  # n_steps -> jitted sharded block
         self._built_for = None  # (cfg, mesh) the jitted step was built for
         self._specs = None
         self._X = None
         self._y = None
+        self._weight = None  # f32[D'] padding mask (mesh runs only)
+        self._n_rows = 0  # REAL (pre-padding) row count
+        self._gen_host = 0  # host mirror of state.generation (no device read)
+        self._gen_dirty = False  # mirror stale (raw evolve_block + stop_fitness)
         self.state: GPState | None = None
         self.history: list[float] = []
+        self.stats = {"host_syncs": 0, "blocks": 0}
         self.feature_names = list(feature_names) if feature_names else None
         self._callback = callback
+        self._callback_every = max(1, int(callback_every))
+        self._block_size = block_size
         self._manager = None
         if checkpoint_dir:
             from repro.ckpt.checkpoint import CheckpointManager
@@ -140,8 +160,9 @@ class GPSession:
 
     @property
     def n_rows(self) -> int:
-        """Data points currently ingested (0 before ingest)."""
-        return 0 if self._y is None else int(self._y.shape[0])
+        """REAL data points currently ingested (0 before ingest; excludes
+        any zero-weight padding added to shard exactly)."""
+        return self._n_rows
 
     @property
     def mesh(self):
@@ -155,12 +176,21 @@ class GPSession:
         return "pod" if mesh is not None and "pod" in mesh.axis_names else None
 
     def build_sharded_step(self):
-        """(step_fn, specs) of the mesh generation step — the lowering
-        surface used by launch/dryrun.py; fit() drives it internally."""
+        """(step_fn, specs) of the mesh generation step — step_fn(state,
+        X, y, weight); `step()` drives it internally."""
         if self.mesh is None:
             raise ValueError("build_sharded_step needs a topology= mesh")
         return engine.sharded_evolve_step(self._cfg, self.mesh,
                                           pod_axis=self._pod_axis())
+
+    def build_sharded_block(self, n_steps: int):
+        """(block_fn, specs) of the K-generation mesh evolution block —
+        the lowering surface used by launch/dryrun.py; `evolve()` drives
+        it internally. block_fn(state, X, y, weight) -> (state, history)."""
+        if self.mesh is None:
+            raise ValueError("build_sharded_block needs a topology= mesh")
+        return engine.sharded_evolve_block(self._cfg, self.mesh, n_steps=n_steps,
+                                           pod_axis=self._pod_axis())
 
     # --- lifecycle -----------------------------------------------------------
 
@@ -187,30 +217,35 @@ class GPSession:
             self._cfg = dataclasses.replace(
                 self._cfg, tree_spec=dataclasses.replace(spec, n_features=F))
 
+        self._n_rows = D
         if self.mesh is not None:
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
 
+            from repro.data.loader import pad_feature_major
+
+            # pad rows up to the data axis; the zero-weight mask threads
+            # through every fitness kernel, so sharding is always exact
             n_data = self.mesh.shape["data"]
-            if D % n_data:
-                raise ValueError(
-                    f"dataset rows ({D}) must be divisible by the data axis "
-                    f"({n_data}); pad or trim the dataset (the sharded step has "
-                    f"no padding mask — see data/loader.pad_rows)")
+            X_fm, y, w = pad_feature_major(X_fm, y, n_data)
             if self._step_fn is None or self._built_for != (self._cfg, self.mesh):
-                # warm_start refits reuse the jitted program; rebuild only
+                # warm_start refits reuse the jitted programs; rebuild only
                 # when the config or mesh actually changed
                 step, self._specs = self.build_sharded_step()
                 with compat.set_mesh(self.mesh):
                     self._step_fn = jax.jit(step, donate_argnums=(0,))
+                self._block_cache = {}
                 self._built_for = (self._cfg, self.mesh)
             self._X = jax.device_put(X_fm, NamedSharding(self.mesh, P(None, "data")))
             self._y = jax.device_put(y, NamedSharding(self.mesh, P("data")))
+            self._weight = jax.device_put(w, NamedSharding(self.mesh, P("data")))
         elif self._backend.jittable:
             self._X = jnp.asarray(X_fm)
             self._y = jnp.asarray(y)
+            self._weight = None  # single device never pads
         else:
             self._X, self._y = X_fm, y
+            self._weight = None
         return self
 
     def init(self, *, key=None, seeds=None) -> "GPSession":
@@ -223,34 +258,85 @@ class GPSession:
         self.state = engine.init_state(self._cfg, key, seeds=seeds,
                                        feature_names=self.feature_names)
         self.history = []
+        self._gen_host = 0
+        self._gen_dirty = False
         if self._manager is not None:
-            restored, _ = self._manager.restore_latest(like=jax.device_get(self.state))
+            restored, step = self._manager.restore_latest(like=jax.device_get(self.state))
             if restored is not None:
                 self.state = jax.tree.map(jnp.asarray, restored)
+                self._gen_host = int(step)
         return self
 
     def step(self) -> GPState:
-        """One generation. Does not synchronize with the device — callers
-        timing the hot loop (benchmarks/) see pure step throughput."""
+        """One generation, unconditionally (no early-stop freeze). Does not
+        synchronize with the device — callers timing the hot loop
+        (benchmarks/) see pure step throughput."""
         if self.state is None:
             self.init()
         if self._step_fn is not None:
             with compat.set_mesh(self.mesh):
-                self.state = self._step_fn(self.state, self._X, self._y)
+                self.state = self._step_fn(self.state, self._X, self._y,
+                                           self._weight)
         elif self._backend.jittable:
-            self.state = engine.evolve_step(self._cfg, self.state, self._X, self._y)
+            self.state = engine.evolve_step(self._cfg, self.state, self._X,
+                                            self._y, self._weight)
         else:
             self.state = self._host_step(self.state)
+        self._gen_host += 1
         return self.state
+
+    def evolve_block(self, n_steps: int) -> tuple[GPState, jax.Array]:
+        """Run `n_steps` generations in ONE device dispatch (`lax.scan`
+        block; scan-inside-shard_map on a mesh). Updates the session state
+        and returns (state, history) WITHOUT synchronizing with the host —
+        history is the device-resident f32[n_steps] best-fitness stream.
+        `evolve()` drives this and owns the block-boundary bookkeeping
+        (history/checkpoints/callbacks)."""
+        state, history = self._dispatch_block(n_steps, n_steps)
+        if self._cfg.stop_fitness is None:
+            self._gen_host += n_steps  # exact: no freeze possible
+        else:
+            self._gen_dirty = True  # frozen steps may not have advanced it
+        return state, history
+
+    def _dispatch_block(self, n_steps: int, limit: int):
+        """One block dispatch: a compiled program of `n_steps` scan steps,
+        of which only the first `limit` advance (the rest freeze) — so one
+        program serves every ragged boundary ≤ n_steps. No host sync, no
+        generation bookkeeping."""
+        if self.state is None:
+            self.init()
+        if not self._backend.jittable:
+            raise ValueError(f"backend {self._backend.name!r} is host-only; "
+                             f"evolution blocks need a jittable backend")
+        if self.mesh is not None:
+            block_fn = self._block_cache.get(n_steps)
+            if block_fn is None:
+                block, _ = self.build_sharded_block(n_steps)
+                with compat.set_mesh(self.mesh):
+                    block_fn = jax.jit(block, donate_argnums=(0,))
+                self._block_cache[n_steps] = block_fn
+            with compat.set_mesh(self.mesh):
+                self.state, history = block_fn(self.state, self._X, self._y,
+                                               self._weight,
+                                               jnp.asarray(limit, jnp.int32))
+        else:
+            self.state, history = engine.evolve_block(
+                self._cfg, self.state, self._X, self._y, self._weight,
+                jnp.asarray(limit, jnp.int32), n_steps=n_steps)
+        return self.state, history
 
     def _host_step(self, state: GPState) -> GPState:
         """Generation loop body for non-jittable (host) backends — same
-        contract as engine.evolve_step, with evaluation on the host."""
+        contract as engine.evolve_step, with evaluation on the host. The
+        selection/variation program is jitted ONCE per (spec, mix,
+        tourn_size, elitism) and cached across call sites and sessions
+        (backends.host_next_generation)."""
         cfg = self._cfg
         fitness = np.asarray(self._backend.fitness(
             np.asarray(state.op), np.asarray(state.arg), self._X, self._y,
             np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
-            data_tile=cfg.data_tile), np.float32)
+            weight=self._weight, data_tile=cfg.data_tile), np.float32)
         i = int(fitness.argmin())
         improved = fitness[i] < float(state.best_fitness)
         best_op = state.op[i] if improved else state.best_op
@@ -260,30 +346,127 @@ class GPSession:
         if cfg.parsimony:
             sel = fitness + cfg.parsimony * np.asarray(tree_sizes(state.op), np.float32)
         key, k_next = jax.random.split(state.key)
-        new_op, new_arg = ev.next_generation(
-            k_next, state.op, state.arg, jnp.asarray(sel), cfg.tree_spec, cfg.mix,
-            cfg.tourn_size, cfg.elitism)
+        next_gen = _backends.host_next_generation(
+            cfg.tree_spec, cfg.mix, cfg.tourn_size, cfg.elitism)
+        new_op, new_arg = next_gen(k_next, state.op, state.arg, jnp.asarray(sel))
         return GPState(key, new_op, new_arg, jnp.asarray(fitness), best_op, best_arg,
                        jnp.asarray(best_fit, jnp.float32), state.generation + 1)
 
-    def evolve(self, generations: int | None = None) -> GPState:
-        """Drive `generations` steps (default: config.generations) with
-        checkpointing, callback, and stop_fitness early termination."""
-        if self.state is None:
-            self.init()
+    def _block_span(self, remaining: int) -> int:
+        """Block size K = min(checkpoint period, callback period, explicit
+        block_size, remaining) — every host-visible side effect lands on a
+        block boundary, so larger periods buy longer device residency.
+        Periods are PHASE-ALIGNED to the absolute generation counter (the
+        next boundary lands ON the period's multiple), so `maybe_save`'s
+        `step % every == 0` test and the callback cadence hold no matter
+        how earlier blocks, resumes, or early stops offset the counter."""
+        k = remaining
+        if self._manager is not None:
+            every = self._manager.every
+            k = min(k, every - self._gen_host % every)
+        if self._callback is not None:
+            k = min(k, self._callback_every - self._gen_host % self._callback_every)
+        if self._block_size is not None:
+            k = min(k, self._block_size)
+        return max(1, k)
+
+    # frozen steps are branch-free selects, NOT skips — they still run the
+    # full evaluation. With stop_fitness armed but no period configured,
+    # cap the block so a converged run overshoots at most this many
+    # generations of device compute before the host notices.
+    _STOP_CHECK_SPAN = 32
+
+    def _block_quantum(self, total: int) -> int:
+        """Compiled block-program length: the smallest configured period
+        (every `_block_span` is ≤ it), so ONE compiled scan serves every
+        boundary — ragged phase-alignment gaps and the final partial block
+        run with a dynamic `limit` instead of a fresh compile."""
+        periods = [p for p in (
+            self._manager.every if self._manager is not None else None,
+            self._callback_every if self._callback is not None else None,
+            self._block_size) if p is not None]
+        if periods:
+            return max(1, min(periods))
+        if self._cfg.stop_fitness is not None:
+            return max(1, min(total, self._STOP_CHECK_SPAN))
+        return max(1, total)
+
+    def _resync_gen(self):
+        """Re-read the generation counter from the device — needed only
+        after raw `evolve_block()` calls under stop_fitness, where frozen
+        steps may not have advanced it. One host sync."""
+        if self._gen_dirty:
+            self._gen_host = int(self.state.generation)
+            self.stats["host_syncs"] += 1
+            self._gen_dirty = False
+
+    def _evolve_host(self, total: int) -> GPState:
+        """Per-generation host loop for non-jittable backends (each
+        generation already synchronizes — blocks would buy nothing)."""
         cfg = self._cfg
-        for g in range(generations if generations is not None else cfg.generations):
+        for i in range(total):
             self.step()
             best = float(self.state.best_fitness)
             self.history.append(best)
+            self.stats["host_syncs"] += 1
             if self._manager is not None:
-                self._manager.maybe_save(self.state, int(self.state.generation))
-            if self._callback is not None:
-                self._callback(g, self.state)
-            if cfg.stop_fitness is not None and best <= cfg.stop_fitness:
+                self._manager.maybe_save(self.state, self._gen_host)
+            stopped = cfg.stop_fitness is not None and best <= cfg.stop_fitness
+            if self._callback is not None and (
+                    self._gen_host % self._callback_every == 0
+                    or stopped or i == total - 1):
+                self._callback(self._gen_host - 1, self.state)
+            if stopped:
                 break
+        return self.state
+
+    def evolve(self, generations: int | None = None) -> GPState:
+        """Drive `generations` generations (default: config.generations) in
+        device-resident blocks: one dispatch AND one host synchronization
+        per block. Checkpointing, the callback, history extension and the
+        stop_fitness check all happen at block boundaries; within a block,
+        early stop is the engine's branch-free on-device freeze — no extra
+        host round-trips, and the device-compute overshoot is bounded by
+        the block span (_STOP_CHECK_SPAN when only stop_fitness is set)."""
+        if self.state is None:
+            self.init()
+        cfg = self._cfg
+        total = generations if generations is not None else cfg.generations
+        if not self._backend.jittable:
+            self._evolve_host(total)
+        else:
+            self._resync_gen()
+            target = self._gen_host + total
+            quantum = self._block_quantum(total)
+            while self._gen_host < target:
+                K = self._block_span(target - self._gen_host)
+                prev_gen = self._gen_host
+                _, history = self._dispatch_block(quantum, K)
+                # ONE sync per block: final generation counter + the
+                # best-fitness stream come back together
+                gen_now, hist = jax.device_get((self.state.generation, history))
+                gen_now = int(gen_now)
+                self.stats["host_syncs"] += 1
+                self.stats["blocks"] += 1
+                ran = gen_now - prev_gen
+                self._gen_host = gen_now
+                self.history.extend(float(b) for b in hist[:ran])
+                if self._manager is not None:
+                    self._manager.maybe_save(self.state, gen_now)
+                stopped = ran < K or (cfg.stop_fitness is not None and ran
+                                      and hist[ran - 1] <= cfg.stop_fitness)
+                last = stopped or gen_now >= target
+                if self._callback is not None and ran and (
+                        gen_now % self._callback_every == 0 or last):
+                    self._callback(gen_now - 1, self.state)
+                if stopped:
+                    break
         if self._manager is not None:
-            self._manager.maybe_save(self.state, int(self.state.generation), force=True)
+            # final save, unless the last block boundary already saved here
+            self._manager.wait()
+            if (not self._manager.saved_steps
+                    or self._manager.saved_steps[-1] != self._gen_host):
+                self._manager.maybe_save(self.state, self._gen_host, force=True)
             self._manager.wait()
         return self.state
 

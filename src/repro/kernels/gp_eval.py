@@ -126,7 +126,10 @@ def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
 
     op, arg:  int32[P, N]   P % pop_tile == 0
     X:        f32[F, D]     D % data_tile == 0
-    y, weight f32[D]        weight is 1.0 on valid points, 0.0 on padding
+    y, weight f32[D]        weight is 1.0 on valid points, 0.0 on padding —
+                            both the wrapper's tile padding AND any dataset
+                            padding the caller threaded in (loader.pad_rows),
+                            composed upstream in ops.fitness
     returns   f32[P] fitness partial-sum (minimize)
     """
     P, N = op.shape

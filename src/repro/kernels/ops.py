@@ -48,15 +48,21 @@ def pick_tiles(n_features: int, n_nodes: int, pop: int, data: int,
 @partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
                                    "gather", "impl", "interpret"))
 def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
-            *, data_tile: int = 1024, pop_tile: int = 8, gather: str | None = None,
-            impl: str = "pallas", interpret: bool | None = None):
-    """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D])."""
+            *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
+            gather: str | None = None, impl: str = "pallas",
+            interpret: bool | None = None):
+    """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D]).
+
+    `weight` is an optional f32[D] mask (0.0 on dataset-padding points,
+    e.g. from data/loader.pad_rows); it composes with the kernel's own
+    data-tile padding mask so padded datasets score exactly."""
     from repro.core.fitness import get_kernel
 
     if impl == "jnp" or not get_kernel(fit_spec.kernel).decomposable:
         # non-decomposable kernels (e.g. pearson) can't accumulate partials
         # across the Pallas data grid — serve them from the reference path
-        return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec)
+        return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
+                                weight=weight)
 
     P, N = op.shape
     F, D = X.shape
@@ -64,7 +70,8 @@ def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSp
 
     pad_p = (-P) % pop_tile
     pad_d = (-D) % data_tile
-    weight = jnp.ones((D,), jnp.float32)
+    weight = (jnp.ones((D,), jnp.float32) if weight is None
+              else weight.astype(jnp.float32))
     if pad_p:
         op = jnp.pad(op, ((0, pad_p), (0, 0)))
         arg = jnp.pad(arg, ((0, pad_p), (0, 0)))

@@ -25,21 +25,24 @@ def fitness_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: Fitne
 
 
 def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
-                      fit_spec: FitnessSpec, tile: int = 65536):
+                      fit_spec: FitnessSpec, weight=None, tile: int = 65536):
     """Same contract, but scans the data dimension in tiles so the
     [pop, nodes, data] evaluation buffer never exceeds one tile — the jnp
-    analogue of the Pallas kernel's VMEM tiling. Kernels that are not
-    sum-decomposable over data (FitnessKernel.decomposable=False) fall
-    back to the un-tiled path."""
+    analogue of the Pallas kernel's VMEM tiling. A caller-supplied `weight`
+    (dataset padding mask, weight 0 on padded points) composes with the
+    internal tile-padding mask. Kernels that are not sum-decomposable over
+    data (FitnessKernel.decomposable=False) fall back to the un-tiled
+    path."""
     import jax
 
     from repro.core.fitness import get_kernel
 
     D = X.shape[1]
     if D <= tile or not get_kernel(fit_spec.kernel).decomposable:
-        return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec)
+        return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
+                           weight=weight)
     pad = (-D) % tile
-    w = jnp.ones((D,), jnp.float32)
+    w = jnp.ones((D,), jnp.float32) if weight is None else weight.astype(jnp.float32)
     if pad:
         X = jnp.pad(X, ((0, 0), (0, pad)))
         y = jnp.pad(y, (0, pad))

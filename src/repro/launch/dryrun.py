@@ -226,7 +226,11 @@ GP_CELLS = {
 
 
 def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False,
-                eval_impl: str = "jnp") -> dict:
+                eval_impl: str = "jnp", block_steps: int = 10) -> dict:
+    """Lower one production GP cell as a K-generation evolution block —
+    the scan-inside-shard_map program `GPSession.evolve()` dispatches, so
+    the cost/memory record covers the real device-resident loop surface
+    (collectives included), not a single step."""
     from repro.core import GPState
     from repro.gp import GPSession
 
@@ -236,7 +240,7 @@ def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False
                      n_consts=8, kernel=kern, backend=eval_impl, topology=mesh)
     cfg = sess.config
     spec = cfg.tree_spec
-    step, specs = sess.build_sharded_step()
+    block, specs = sess.build_sharded_block(block_steps)
     N = spec.num_nodes
     sds = jax.ShapeDtypeStruct
     state_shapes = GPState(
@@ -247,10 +251,13 @@ def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False
     state_sds = SH.named(mesh, specs["state"], state_shapes)
     X_sds = SH.named(mesh, specs["X"], sds((F, rows), jnp.float32))
     y_sds = SH.named(mesh, specs["y"], sds((rows,), jnp.float32))
+    w_sds = SH.named(mesh, specs["weight"], sds((rows,), jnp.float32))
+    limit_sds = SH.named(mesh, specs["limit"], sds((), jnp.int32))
     try:
         with compat.set_mesh(mesh):
-            lowered = jax.jit(step, donate_argnums=(0,)).lower(state_sds, X_sds, y_sds)
-        rec = {"arch": name, "shape": f"pop{pop}_rows{rows}_F{F}",
+            lowered = jax.jit(block, donate_argnums=(0,)).lower(
+                state_sds, X_sds, y_sds, w_sds, limit_sds)
+        rec = {"arch": name, "shape": f"pop{pop}_rows{rows}_F{F}_K{block_steps}",
                "multi_pod": multi_pod, "status": "ok",
                **analyze(lowered, want_hlo=keep_hlo)}
     except Exception as e:
@@ -276,6 +283,8 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--gp")
     ap.add_argument("--gp-impl", default="jnp")
+    ap.add_argument("--gp-block", type=int, default=10,
+                    help="generations per lowered GP evolution block")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--keep-hlo", action="store_true")
@@ -284,7 +293,7 @@ def main():
 
     if args.gp:
         rec = run_gp_cell(args.gp, args.multi_pod, args.out, args.keep_hlo,
-                          args.gp_impl)
+                          args.gp_impl, block_steps=args.gp_block)
         print(json.dumps({k: v for k, v in rec.items() if k != "trace"}, indent=1))
         raise SystemExit(0 if rec["status"] != "FAIL" else 1)
 

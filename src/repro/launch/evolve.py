@@ -41,8 +41,13 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
                 topology: MeshTopology | None = None,
                 archive: str | None = None, seed: int = 0, log=print,
                 ckpt_dir: str | None = None, ckpt_every: int = 10,
-                seeds=None):
-    """One archived GP run on a named dataset through the GPSession door."""
+                seeds=None, archive_every: int = 1):
+    """One archived GP run on a named dataset through the GPSession door.
+
+    `archive_every` is the callback (= evolution-block) period: the run
+    stays device-resident for that many generations per dispatch, and the
+    archive gets one record per block boundary (the per-generation
+    best-fitness curve still lands in full via `sess.history`)."""
     kw = dict(pop_size=pop, max_depth=depth, n_consts=8, generations=generations,
               backend=backend, topology=topology,
               checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every)
@@ -53,7 +58,8 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
     def archive_gen(_, state):
         g = int(state.generation) - 1  # absolute index, stable across resumes
         best = float(state.best_fitness)
-        history.append(best)
+        # full per-generation curve from the block's metrics stream
+        history.extend(sess.history[len(history):])
         if archive:
             os.makedirs(archive, exist_ok=True)
             rec = {"generation": g, "best_fitness": best,
@@ -61,18 +67,21 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
                    "population_fitness": np.asarray(state.fitness).tolist()}
             with open(os.path.join(archive, f"gen_{g:04d}.json"), "w") as f:
                 json.dump(rec, f)
-        if g % 5 == 0 or g == generations - 1:
+        if g % 5 < archive_every or g == generations - 1:
             log(f"gen {g:3d} best_fitness {best:.5f}")
 
-    sess = GPSession.from_dataset(name, callback=archive_gen, **kw)
+    sess = GPSession.from_dataset(name, callback=archive_gen,
+                                  callback_every=archive_every, **kw)
     sess.init(key=jax.random.PRNGKey(seed), seeds=seeds)
     if sess.generation:
         log(f"resumed from generation {sess.generation}")
     t0 = time.time()
     sess.evolve(max(0, generations - sess.generation))
     wall = time.time() - t0
+    history.extend(sess.history[len(history):])
     tree = sess.best_expression()
-    log(f"[{name}] {generations} generations in {wall:.2f}s — best: {tree}")
+    log(f"[{name}] {generations} generations in {wall:.2f}s — best: {tree} "
+        f"({sess.stats['blocks']} blocks, {sess.stats['host_syncs']} host syncs)")
     return sess.state, wall, history
 
 
@@ -91,11 +100,15 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed-exprs", nargs="*", default=None,
                     help="seed population expressions, e.g. '(x0 * x1)'")
+    ap.add_argument("--archive-every", type=int, default=1,
+                    help="generations per evolution block / archive record "
+                         "(larger = fewer host syncs)")
     args = ap.parse_args()
     run_dataset(args.dataset, generations=args.generations, pop=args.pop,
                 depth=args.depth, backend=args.backend,
                 topology=parse_mesh(args.mesh), archive=args.archive,
-                seed=args.seed, ckpt_dir=args.ckpt_dir, seeds=args.seed_exprs)
+                seed=args.seed, ckpt_dir=args.ckpt_dir, seeds=args.seed_exprs,
+                archive_every=args.archive_every)
 
 
 if __name__ == "__main__":

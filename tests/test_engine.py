@@ -63,6 +63,8 @@ _SUBPROCESS_SHARDED = textwrap.dedent("""
     Xk = np.abs(np.random.RandomState(1).randn(2, 128)).astype(np.float32) + 0.5
     yk = (Xk[0]**2 / Xk[1]).astype(np.float32)
 
+    wk = jnp.ones((128,), jnp.float32)
+
     # 3D mesh with island model
     mesh = make_host_mesh(data=2, model=2, pod=2)
     step, specs = sharded_evolve_step(cfg, mesh, pod_axis="pod")
@@ -70,7 +72,7 @@ _SUBPROCESS_SHARDED = textwrap.dedent("""
     with compat.set_mesh(mesh):
         js = jax.jit(step)
         for _ in range(12):
-            s = js(s, jnp.asarray(Xk), jnp.asarray(yk))
+            s = js(s, jnp.asarray(Xk), jnp.asarray(yk), wk)
     assert np.isfinite(float(s.best_fitness)), s.best_fitness
     assert float(s.best_fitness) < 50.0
     assert int(s.generation) == 12
@@ -82,7 +84,7 @@ _SUBPROCESS_SHARDED = textwrap.dedent("""
     with compat.set_mesh(mesh2):
         js2 = jax.jit(step2)
         for _ in range(12):
-            s2 = js2(s2, jnp.asarray(Xk), jnp.asarray(yk))
+            s2 = js2(s2, jnp.asarray(Xk), jnp.asarray(yk), wk)
     assert np.isfinite(float(s2.best_fitness))
     print("SHARDED_OK")
 """)

@@ -246,14 +246,12 @@ _SUBPROCESS_TOPOLOGY = textwrap.dedent("""
     s2.fit(X_rows, y)
     assert np.isfinite(s2.best_fitness)
 
-    # indivisible rows fail loudly, not silently wrong
-    try:
-        GPSession(pop_size=64, kernel="r",
-                  topology=MeshTopology(data=4, model=2)).ingest(X_rows[:126], y[:126])
-    except ValueError as e:
-        assert "divisible" in str(e), e
-    else:
-        raise AssertionError("expected ValueError for indivisible rows")
+    # indivisible rows shard via zero-weight padding instead of raising
+    s3 = GPSession(pop_size=64, generations=4, kernel="r",
+                   topology=MeshTopology(data=4, model=2))
+    s3.fit(X_rows[:126], y[:126])
+    assert s3.n_rows == 126, s3.n_rows  # real rows, not the padded 128
+    assert np.isfinite(s3.best_fitness)
     print("TOPOLOGY_OK")
 """)
 
