@@ -10,8 +10,10 @@ per-generation best-fitness stream returned as a [K] array so the host
 synchronizes once per block instead of once per generation. Under
 `shard_map` the step distributes as:
 
-    data axis   : dataset columns sharded; per-tree fitness partials are
-                  `psum`-reduced (the paper's vectorized-evaluation axis)
+    data axis   : dataset columns sharded; per-tree weighted fitness
+                  moments are `psum`-reduced then finalized (the paper's
+                  vectorized-evaluation axis; two-pass protocol, so even
+                  pearson/r2 statistics shard here)
     model axis  : population sharded; selection needs the global fitness
                   vector + parent pool, an O(pop·nodes) `all_gather` (tiny
                   next to evaluation, paper §2.3)
@@ -88,6 +90,23 @@ def _eval_fitness(cfg: GPConfig, op, arg, X, y, weight, const_table):
             f"eval backend {backend.name!r} is host-only and cannot run inside "
             f"the jitted generation step; drive it through repro.gp.GPSession")
     return backend.fitness(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
+                           weight=weight, data_tile=cfg.data_tile)
+
+
+def _eval_moments(cfg: GPConfig, op, arg, X, y, weight, const_table):
+    """Phase 1 of the two-pass fitness protocol on the backend registered
+    under `cfg.eval_impl`: f32[P, M] weighted moment partials for THIS
+    shard's data. The mesh step `psum`s them across the data axis and
+    finalizes with `FitnessKernel.reduce_moments` — how non-decomposable
+    objectives (pearson, r2) run on any `MeshTopology`."""
+    from repro.gp.backends import get_backend
+
+    backend = get_backend(cfg.eval_impl)
+    if backend.moments is None:
+        raise ValueError(
+            f"eval backend {backend.name!r} exposes no moment pass and cannot "
+            f"evaluate fitness under a data-sharded mesh")
+    return backend.moments(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
                            weight=weight, data_tile=cfg.data_tile)
 
 
@@ -225,10 +244,12 @@ def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
     from repro.core.islands import migrate
 
     kern = fit.get_kernel(cfg.fitness.kernel)
-    if not kern.decomposable:
+    if kern.moments is None:
         raise ValueError(
-            f"fitness kernel {kern.name!r} is not sum-decomposable over data; "
-            f"its partials cannot be psum-reduced across the {data_axis!r} axis")
+            f"fitness kernel {kern.name!r} defines no moment pass "
+            f"(moments/reduce_moments), so nothing can be psum-reduced across "
+            f"the {data_axis!r} axis; register it through the two-pass protocol "
+            f"(see docs/fitness-kernels.md) or run single-device")
 
     pod_dims = (pod_axis,) if pod_axis else ()
     n_shards = mesh.shape[model_axis]
@@ -249,10 +270,14 @@ def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
 
     def step(state: GPState, X, y, weight) -> GPState:
         const_table = cfg.tree_spec.const_table()
-        # --- evaluate: local pop shard x local data shard; psum over data
-        partial_fit = _eval_fitness(cfg, state.op, state.arg, X, y, weight,
-                                    const_table)
-        fitness_local = jax.lax.psum(partial_fit, data_axis)
+        # --- evaluate, two passes: local pop shard x local data shard
+        # emits weighted moments; psum over data completes phase 1, and
+        # reduce_moments finalizes — for decomposable kernels M == 1 and
+        # this degenerates to the classic psum-of-partials
+        partial_m = _eval_moments(cfg, state.op, state.arg, X, y, weight,
+                                  const_table)
+        fitness_local = kern.reduce_moments(
+            jax.lax.psum(partial_m, data_axis), cfg.fitness)
         # --- selection pool = this pod's population: tiny all_gather
         fitness_g = jax.lax.all_gather(fitness_local, model_axis, tiled=True)
         op_g = jax.lax.all_gather(state.op, model_axis, tiled=True)

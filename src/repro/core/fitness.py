@@ -3,25 +3,45 @@
 Karoo GP appends a per-kernel fitness sub-graph to each tree's TF graph;
 we fuse the same reductions after the vectorized evaluation. The paper's
 three kernels — (r)egression, (c)lassification, (m)atch — ship built in,
-plus `mse` and `pearson`; new objectives register a `FitnessKernel` and
-every evaluation path (jnp reference, tiled reference, Pallas fused
+plus `mse`, `pearson` and `r2`; new objectives register a `FitnessKernel`
+and every evaluation path (jnp reference, tiled reference, Pallas fused
 kernel, scalar baseline) and the selection code pick them up without
-modification.
+modification. See docs/fitness-kernels.md for the registration guide.
+
+Every kernel is evaluated in **two passes** so any objective — including
+statistics like Pearson correlation that need global moments — works on
+any data tiling and any device mesh:
+
+  phase 1  `moments(preds, y, weight, spec)` returns weighted sufficient
+           moments f32[P, M] over one data tile/shard. Moments are plain
+           weighted sums over data points, so partial moments from
+           different tiles are SUMMED (jnp tiling, Pallas grid
+           accumulation, mesh `psum` on the data axis).
+  phase 2  `reduce_moments(moments, spec)` turns the fully-summed
+           f32[..., M] moments into the final f32[...] fitness.
+
+Sum-decomposable objectives (abs-error, MSE, hit counts) are the trivial
+M=1 case: their single "moment" *is* the fitness partial and phase 2 is a
+squeeze. Such kernels can be registered with just `partial_fitness`
+(the pre-two-pass surface, kept as the convenience spelling) and the
+registry derives the moment pass automatically. Conversely, a kernel
+registered through `moments`/`reduce_moments` gets a derived
+`partial_fitness` that computes the full fitness in one call (phase 1 +
+phase 2 over the whole dataset).
 
 Conventions every kernel obeys:
 
   * MINIMIZE — lower fitness is better (classify and match are negated
     hit counts), so selection code is kernel-agnostic.
-  * `partial_fitness(preds, y, weight, spec)` returns a per-tree f32[P]
-    partial over one data tile. When `decomposable`, partials from
-    different tiles are summed (jnp tiling, Pallas grid accumulation,
-    mesh `psum`) to form the full fitness; non-decomposable kernels
-    (e.g. Pearson) only run on un-tiled single-device paths.
-  * `weight` masks data padding: points with weight 0 contribute nothing.
+  * `weight` masks data padding: points with weight 0 contribute nothing
+    to any moment. Multiply by `weight` BEFORE any squaring/products so a
+    padded point's garbage prediction (even ±inf) is zeroed, not NaN'd.
   * NaN sanitization — a NaN prediction at any *valid* (weight > 0)
     point makes the tree's fitness +inf. A NaN-producing tree must never
     win a tournament in ANY kernel (`round(NaN)` → int is undefined, so
-    classify/match cannot just bin the prediction).
+    classify/match cannot just bin the prediction). Two-pass kernels
+    carry an "invalid count" moment (NaN-at-valid-point occurrences, a
+    plain weighted sum) and let `reduce_moments` map count > 0 → +inf.
 """
 from __future__ import annotations
 
@@ -47,25 +67,93 @@ class FitnessSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FitnessKernel:
-    """One pluggable objective. `partial_fitness` and `metric` must be
-    pure jnp (they also run inside the Pallas kernel body and under
-    shard_map)."""
+    """One pluggable objective, evaluated as moments → sum → finalize.
+
+    All callables must be pure jnp (they also run inside the Pallas
+    kernel body and under shard_map). Shapes:
+
+      moments:         (preds f32[P, D], y f32[D], weight f32[D], spec)
+                       -> f32[P, M] weighted moment partials for one data
+                       tile/shard; partials from different tiles/shards
+                       are summed element-wise before phase 2.
+      reduce_moments:  (moments f32[..., M], spec) -> f32[...] final
+                       fitness (minimize) from fully-summed moments.
+      partial_fitness: (preds f32[P, D], y f32[D], weight f32[D], spec)
+                       -> f32[P]. For `decomposable` kernels this is the
+                       M=1 moment (summable across tiles); otherwise it
+                       is the whole-dataset fitness in one call.
+      metric:          (preds f32[P, D], y f32[D], spec) -> f32[P]
+                       human-facing score (fraction correct, mean |err|,
+                       R², ...) used by `GPSession.score`.
+
+    Register EITHER `partial_fitness` (decomposable objectives; the
+    moment pass is derived) OR `moments` + `reduce_moments` +
+    `n_moments` (two-pass objectives; `partial_fitness` is derived) —
+    `register_kernel` normalizes whichever is given. Supplying BOTH is
+    also legal and lets a two-pass kernel keep a numerically superior
+    whole-dataset formula (e.g. mean-centered pearson) for the un-tiled
+    paths while the moment form serves tiling and meshes. A kernel
+    registered with `decomposable=False` and no moment pass is legal but
+    runs single-device only (no mesh, no data tiling).
+    """
 
     name: str
-    partial_fitness: Callable  # (preds[P,D], y[D], w[D], spec) -> f32[P]
-    metric: Callable  # (preds[P,D], y[D], spec) -> f32[P] human-facing
+    partial_fitness: Callable = None  # see class docstring
+    metric: Callable = None  # (preds[P,D], y[D], spec) -> f32[P] human-facing
     aliases: tuple = ()
-    decomposable: bool = True  # partials may be summed across data tiles
+    decomposable: bool = True  # partial_fitness may be summed across data tiles
+    moments: Callable = None  # phase 1: (preds, y, w, spec) -> f32[P, M]
+    reduce_moments: Callable = None  # phase 2: (f32[..., M], spec) -> f32[...]
+    n_moments: int = 1  # M — static so kernel output shapes are static
 
 
 _REGISTRY: dict[str, FitnessKernel] = {}
 
 
+def _normalize(kernel: FitnessKernel) -> FitnessKernel:
+    """Fill in the derivable half of the two-pass protocol.
+
+    partial_fitness only (decomposable)  -> derive moments/reduce_moments
+    moments + reduce_moments             -> derive partial_fitness
+    partial_fitness, decomposable=False  -> legacy single-device kernel
+                                            (no moment pass; mesh paths
+                                            reject it with a clear error)
+    """
+    if kernel.moments is not None:
+        if kernel.reduce_moments is None:
+            raise ValueError(f"fitness kernel {kernel.name!r} defines moments "
+                             f"but no reduce_moments")
+        mom, red = kernel.moments, kernel.reduce_moments
+        repl = {}
+        if kernel.partial_fitness is None:
+            repl["partial_fitness"] = lambda p, y, w, s: red(mom(p, y, w, s), s)
+        if kernel.n_moments > 1:
+            # a multi-moment kernel's derived partial is the FULL fitness,
+            # which is not summable across tiles
+            repl["decomposable"] = False
+        return dataclasses.replace(kernel, **repl) if repl else kernel
+    if kernel.partial_fitness is None:
+        raise ValueError(f"fitness kernel {kernel.name!r} must define either "
+                         f"partial_fitness or moments + reduce_moments")
+    if not kernel.decomposable:
+        return kernel  # legacy full-data objective: single-device only
+    pf = kernel.partial_fitness
+    return dataclasses.replace(
+        kernel,
+        moments=lambda p, y, w, s: pf(p, y, w, s)[..., None],
+        reduce_moments=lambda m, s: m[..., 0],
+        n_moments=1)
+
+
 def register_kernel(kernel: FitnessKernel, *, overwrite: bool = False) -> FitnessKernel:
-    for key in (kernel.name, *kernel.aliases):
-        if key in _REGISTRY and not overwrite:
-            raise ValueError(f"fitness kernel {key!r} already registered "
-                             f"(pass overwrite=True to replace)")
+    keys = (kernel.name, *kernel.aliases)
+    if not overwrite:
+        for key in keys:
+            if key in _REGISTRY:
+                raise ValueError(f"fitness kernel {key!r} already registered "
+                                 f"(pass overwrite=True to replace)")
+    kernel = _normalize(kernel)
+    for key in keys:
         _REGISTRY[key] = kernel
     return kernel
 
@@ -96,6 +184,17 @@ def _has_invalid(preds, w):
     return (jnp.isnan(preds) & (w[None, :] > 0)).any(-1)
 
 
+def _nonfinite_count(preds, w):
+    """f32[P] count of non-finite (NaN or ±inf) predictions at valid
+    points — the summable invalid moment of the correlation kernels
+    (count > 0 after the cross-tile sum iff any tile saw one). Unlike
+    r/c/m/mse — where an inf prediction just loses points — an inf
+    entering pearson/r2's products would poison the moments into NaN,
+    and a NaN fitness WINS argmin; so these kernels declare the whole
+    tree invalid (+inf fitness) instead."""
+    return ((~jnp.isfinite(preds)) & (w > 0)).sum(-1).astype(jnp.float32)
+
+
 def _regression_partial(preds, y, w, spec):
     err = jnp.abs(preds - y[None, :])
     err = jnp.where(w[None, :] > 0, err, 0.0)  # mask BEFORE inf-sanitize
@@ -122,19 +221,117 @@ def _mse_partial(preds, y, w, spec):
     return jnp.where(jnp.isnan(err2), jnp.inf, err2).sum(-1)
 
 
+# Pearson (1 - r² against the target) needs global moments, so it is the
+# canonical two-pass kernel: phase 1 collects the six weighted moments of
+# the classic product-moment formula plus the invalid count; phase 2 forms
+# means/variances/covariance from the summed moments. `xw = x * w` is
+# computed FIRST so zero-weight points contribute exact 0.0 even when the
+# prediction saturated to ±3.4e38 (w * x² would overflow to inf·0 = NaN).
+#
+# pearson and r2 ALSO register an explicit `partial_fitness`: the
+# mean-centered single-pass form, exact in f32, used whenever the whole
+# dataset is in hand (fitness_from_preds, the un-tiled reference path,
+# metric). The raw-moment form E[x²]-E[x]² cancels catastrophically when
+# |mean| >> std (unnormalized targets), so the tiled/mesh paths trade
+# some resolution for shardability — standardize such targets, or see
+# the ROADMAP note on a Welford-style merge.
+
+_PEARSON_MOMENTS = 7  # Σw, Σwx, Σwy, Σwx², Σwy², Σwxy, invalid-count
+
+
 def _pearson_partial(preds, y, w, spec):
-    """1 - r² against the target — needs global moments, so this kernel is
-    NOT decomposable over data tiles."""
+    """Exact centered single-pass 1 - r² (whole dataset in one call)."""
     w_ = w[None, :]
     n = jnp.maximum(w.sum(), 1.0)
-    p0 = jnp.nan_to_num(preds)
+    p0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
     mx = (p0 * w_).sum(-1, keepdims=True) / n
     my = (y[None, :] * w_).sum(-1, keepdims=True) / n
     dx = (p0 - mx) * w_
     dy = (y[None, :] - my) * w_
     r2 = jnp.square((dx * dy).sum(-1)) / jnp.maximum(
         (dx * dx).sum(-1) * (dy * dy).sum(-1), 1e-12)
-    return jnp.where(_has_invalid(preds, w), jnp.inf, 1.0 - r2)
+    invalid = ((~jnp.isfinite(preds)) & (w_ > 0)).any(-1)
+    out = jnp.where(invalid, jnp.inf, 1.0 - r2)
+    # huge-but-finite preds can still overflow dx² to inf -> inf/inf NaN;
+    # a NaN fitness must never win a tournament
+    return jnp.where(jnp.isnan(out), jnp.inf, out)
+
+
+def _pearson_moments(preds, y, w, spec):
+    w_ = jnp.broadcast_to(w[None, :], preds.shape)
+    yb = jnp.broadcast_to(y[None, :], preds.shape)
+    x0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
+    xw = x0 * w_
+    yw = yb * w_
+    return jnp.stack([
+        w_.sum(-1), xw.sum(-1), yw.sum(-1),
+        (xw * x0).sum(-1), (yw * yb).sum(-1), (xw * yb).sum(-1),
+        _nonfinite_count(preds, w_),
+    ], axis=-1)
+
+
+# Below this relative level a raw-moment "variance" E[x²]-E[x]² is pure
+# f32 cancellation noise of the subtraction; cov²/noise would then crown
+# CONSTANT-prediction trees — which every GP population contains — as
+# perfect (r²=1, fitness 0). Treat it as zero correlation instead: 256
+# ulps covers the ~√D·eps accumulation error of realistic shard sums
+# with a wide margin, while genuine signals sit orders above it.
+_VAR_NOISE_FLOOR = 256 * 1.1920929e-07  # 256 * f32 machine epsilon
+
+
+def _pearson_reduce(m, spec):
+    n = jnp.maximum(m[..., 0], 1.0)
+    mx, my = m[..., 1] / n, m[..., 2] / n
+    ex2, ey2 = m[..., 3] / n, m[..., 4] / n
+    # cancellation can push a zero variance epsilon-negative: clamp at 0
+    var_x = jnp.maximum(ex2 - mx * mx, 0.0)
+    var_y = jnp.maximum(ey2 - my * my, 0.0)
+    cov = m[..., 5] / n - mx * my
+    ok = (var_x > _VAR_NOISE_FLOOR * ex2) & (var_y > _VAR_NOISE_FLOOR * ey2)
+    r2 = jnp.where(ok, jnp.clip(jnp.square(cov)
+                                / jnp.maximum(var_x * var_y, 1e-12), 0.0, 1.0), 0.0)
+    out = jnp.where(m[..., 6] > 0, jnp.inf, 1.0 - r2)
+    return jnp.where(jnp.isnan(out), jnp.inf, out)  # NaN must never win
+
+
+# Coefficient-of-determination kernel: fitness = 1 - R² = SSres/SStot
+# (minimize; 0 = perfect fit). SSres is directly summable; SStot needs the
+# global target mean — registered purely through the two-pass protocol to
+# prove the extension point (docs/fitness-kernels.md walks through it).
+
+_R2_MOMENTS = 5  # Σw, Σwy, Σwy², Σw(pred-y)², invalid-count
+
+
+def _r2_partial(preds, y, w, spec):
+    """Exact centered single-pass 1 - R² (whole dataset in one call)."""
+    w_ = w[None, :]
+    n = jnp.maximum(w.sum(), 1.0)
+    p0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
+    my = (y[None, :] * w_).sum(-1, keepdims=True) / n
+    ss_tot = jnp.maximum((jnp.square(y[None, :] - my) * w_).sum(-1), 1e-12)
+    ss_res = (jnp.square(p0 - y[None, :]) * w_).sum(-1)
+    invalid = ((~jnp.isfinite(preds)) & (w_ > 0)).any(-1)
+    out = jnp.where(invalid, jnp.inf, ss_res / ss_tot)
+    return jnp.where(jnp.isnan(out), jnp.inf, out)
+
+
+def _r2_moments(preds, y, w, spec):
+    w_ = jnp.broadcast_to(w[None, :], preds.shape)
+    yb = jnp.broadcast_to(y[None, :], preds.shape)
+    x0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
+    yw = yb * w_
+    err = (x0 - yb) * w_  # weight BEFORE squaring (see pearson note)
+    return jnp.stack([
+        w_.sum(-1), yw.sum(-1), (yw * yb).sum(-1), (err * (x0 - yb)).sum(-1),
+        _nonfinite_count(preds, w_),
+    ], axis=-1)
+
+
+def _r2_reduce(m, spec):
+    n = jnp.maximum(m[..., 0], 1.0)
+    ss_tot = jnp.maximum(m[..., 2] - jnp.square(m[..., 1]) / n, 1e-12)
+    out = jnp.where(m[..., 4] > 0, jnp.inf, m[..., 3] / ss_tot)
+    return jnp.where(jnp.isnan(out), jnp.inf, out)  # NaN must never win
 
 
 register_kernel(FitnessKernel(
@@ -156,9 +353,16 @@ register_kernel(FitnessKernel(
     name="mse", partial_fitness=_mse_partial,
     metric=lambda preds, y, spec: jnp.square(preds - y[None, :]).mean(-1)))
 register_kernel(FitnessKernel(
-    name="pearson", decomposable=False,
+    name="pearson", n_moments=_PEARSON_MOMENTS,
     partial_fitness=_pearson_partial,
+    moments=_pearson_moments, reduce_moments=_pearson_reduce,
     metric=lambda preds, y, spec: _pearson_partial(
+        preds, y, jnp.ones_like(y, jnp.float32), spec)))
+register_kernel(FitnessKernel(
+    name="r2", aliases=("r-squared",), n_moments=_R2_MOMENTS,
+    partial_fitness=_r2_partial,
+    moments=_r2_moments, reduce_moments=_r2_reduce,
+    metric=lambda preds, y, spec: 1.0 - _r2_partial(
         preds, y, jnp.ones_like(y, jnp.float32), spec)))
 
 
@@ -166,10 +370,25 @@ register_kernel(FitnessKernel(
 
 
 def fitness_from_preds(preds, y, spec: FitnessSpec, weight=None):
-    """preds: [P, D] predictions; y: [D] targets. Returns float32[P] (minimize)."""
+    """preds: [P, D] predictions; y: [D] targets. Returns float32[P]
+    (minimize) — the whole-dataset fitness in one call (both phases for
+    two-pass kernels)."""
     y = y.astype(jnp.float32)
     w = jnp.ones_like(y) if weight is None else weight.astype(jnp.float32)
     return get_kernel(spec.kernel).partial_fitness(preds, y, w, spec)
+
+
+def moments_from_preds(preds, y, spec: FitnessSpec, weight=None):
+    """Phase 1 only: f32[P, M] weighted moment partials of preds[P, D]
+    against y[D]. Sum the [P, M] partials from every tile/shard, then
+    finish with `get_kernel(spec.kernel).reduce_moments`."""
+    kern = get_kernel(spec.kernel)
+    if kern.moments is None:
+        raise ValueError(f"fitness kernel {kern.name!r} defines no moment pass; "
+                         f"it cannot be tiled or sharded over data")
+    y = y.astype(jnp.float32)
+    w = jnp.ones_like(y) if weight is None else weight.astype(jnp.float32)
+    return kern.moments(preds, y, w, spec)
 
 
 def accuracy_from_preds(preds, y, spec: FitnessSpec):

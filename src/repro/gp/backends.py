@@ -32,6 +32,12 @@ class EvalBackend:
     evaluate: (op[P,N], arg[P,N], X[F,D], const_table[C], tree_spec) -> preds[P,D]
     fitness:  (op, arg, X, y, const_table, tree_spec, fit_spec,
                weight=None, data_tile=...) -> f32[P]
+    moments:  same signature as fitness -> f32[P, M] — phase 1 of the
+              two-pass fitness protocol (FitnessKernel.moments summed
+              over this backend's tiles but NOT finalized). The mesh
+              step `psum`s these across the data axis and applies
+              `FitnessKernel.reduce_moments`; backends without a moment
+              pass (None) cannot evaluate under a data-sharded mesh.
 
     `weight` is an optional f32[D] dataset-padding mask (0.0 on padded
     points) — every backend must score a padded dataset identically to
@@ -43,6 +49,7 @@ class EvalBackend:
     name: str
     evaluate: Callable
     fitness: Callable
+    moments: Callable = None
     jittable: bool = True
     supports_topology: bool = True
     fused_fitness: bool = False  # evaluation+reduction in one kernel
@@ -107,11 +114,27 @@ def _jnp_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
                              weight=weight)
 
 
+def _jnp_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
+                 data_tile=1024):
+    from repro.kernels.ref import moments_ref_tiled
+
+    return moments_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec,
+                             weight=weight)
+
+
 def _pallas_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
                     data_tile=1024):
     from repro.kernels import ops as kops
 
     return kops.fitness(op, arg, X, y, const_table, tree_spec, fit_spec,
+                        weight=weight, data_tile=data_tile)
+
+
+def _pallas_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
+                    data_tile=1024):
+    from repro.kernels import ops as kops
+
+    return kops.moments(op, arg, X, y, const_table, tree_spec, fit_spec,
                         weight=weight, data_tile=data_tile)
 
 
@@ -135,6 +158,19 @@ def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None
                           weight=None if weight is None else np.asarray(weight))
 
 
+def _scalar_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
+                    data_tile=1024):
+    # the scalar backend is host-only and never runs under shard_map; the
+    # moment pass exists so host-side tools can inspect every backend
+    # through one contract
+    from repro.core.fitness import moments_from_preds
+
+    preds = _scalar_evaluate(op, arg, X, const_table, tree_spec)
+    w = None if weight is None else np.asarray(weight, np.float32)
+    return np.asarray(moments_from_preds(preds, np.asarray(y, np.float32),
+                                         fit_spec, weight=w))
+
+
 @functools.lru_cache(maxsize=64)
 def host_next_generation(tree_spec, mix, tourn_size: int, elitism: int):
     """One jitted `next_generation` per (spec, mix, tourn_size, elitism),
@@ -154,12 +190,13 @@ def host_next_generation(tree_spec, mix, tourn_size: int, elitism: int):
 
 register_backend(EvalBackend(
     name="jnp", evaluate=_jnp_evaluate, fitness=_jnp_fitness,
+    moments=_jnp_moments,
     description="vectorized XLA level-sweep (paper's *-CPU_TF)"))
 register_backend(EvalBackend(
     name="pallas", evaluate=_jnp_evaluate, fitness=_pallas_fitness,
-    fused_fitness=True,
+    moments=_pallas_moments, fused_fitness=True,
     description="fused eval+fitness Pallas TPU kernel (interpret off-TPU)"))
 register_backend(EvalBackend(
     name="scalar", evaluate=_scalar_evaluate, fitness=_scalar_fitness,
-    jittable=False, supports_topology=False,
+    moments=_scalar_moments, jittable=False, supports_topology=False,
     description="paper-faithful per-data-point interpreter (1-CPU_SP)"))

@@ -60,6 +60,12 @@ class _SymbolicBase:
                          block_size=self.block_size, **overrides)
 
     def fit(self, X, y):
+        """Evolve on X [n_samples, n_features], y [n_samples]. Blocks
+        until the run finishes (the session synchronizes once per
+        evolution block); fitted attributes `expression_` (str),
+        `best_fitness_` (float, minimize) and `n_features_in_` are host
+        values. With warm_start=True a second fit continues the evolved
+        population instead of reinitializing."""
         cont = self.warm_start and getattr(self, "session_", None) is not None
         if not cont:
             self.session_ = self._make_session()
@@ -77,15 +83,20 @@ class _SymbolicBase:
 
 class SymbolicRegressor(_SymbolicBase):
     """GP symbolic regression (the paper's (r) kernel by default; pass
-    kernel-capable subclasses or register new FitnessKernels for others)."""
+    kernel-capable subclasses or register new FitnessKernels for others).
+    `backend=` / `topology=` forward to GPSession, so the same estimator
+    runs the scalar baseline, the Pallas kernel, or a device mesh."""
 
     _kernel = "r"
 
     def predict(self, X) -> np.ndarray:
+        """Champion expression on X [n_samples, n_features] ->
+        f32[n_samples] host array (one device sync)."""
         return self._raw_predict(X)
 
     def score(self, X, y) -> float:
-        """R² (sklearn's regressor convention)."""
+        """R² (sklearn's regressor convention), computed on the host in
+        float64; 1.0 is a perfect fit, can be arbitrarily negative."""
         y = np.asarray(y, np.float64)
         pred = np.asarray(self.predict(X), np.float64)
         ss_res = float(((y - pred) ** 2).sum())
@@ -94,7 +105,9 @@ class SymbolicRegressor(_SymbolicBase):
 
 
 class SymbolicClassifier(_SymbolicBase):
-    """GP classification via Karoo's round-and-clip label binning."""
+    """GP classification via Karoo's round-and-clip label binning: the
+    evolved expression's float output is rounded and clipped into
+    {0..n_classes-1} (fitness counts weighted hits, minimize-negated)."""
 
     _kernel = "c"
 
@@ -106,11 +119,13 @@ class SymbolicClassifier(_SymbolicBase):
         return {"kernel": self._kernel, "n_classes": self.n_classes}
 
     def predict(self, X) -> np.ndarray:
+        """Labels int32[n_samples] in {0..n_classes-1} for
+        X [n_samples, n_features] (host array, one device sync)."""
         from repro.core.fitness import classify_labels
 
         return np.asarray(classify_labels(
             np.nan_to_num(self._raw_predict(X)), self.n_classes))
 
     def score(self, X, y) -> float:
-        """Accuracy (sklearn's classifier convention)."""
+        """Accuracy in [0, 1] (sklearn's classifier convention)."""
         return float((self.predict(X) == np.asarray(y).astype(np.int64)).mean())

@@ -53,15 +53,30 @@ from repro.gp import backends as _backends
 
 @dataclasses.dataclass(frozen=True)
 class MeshTopology:
-    """Device-mesh shape for a sharded run. `data` shards dataset columns
-    (fitness partials psum-reduce), `model` shards the population, `pod`
-    runs island populations with periodic elite migration."""
+    """Device-mesh shape for a sharded run; `data * model * pod` must not
+    exceed the process's device count.
+
+    data   shards dataset columns: `X f32[F, D]`, `y f32[D]` and the
+           padding mask `weight f32[D]` split on D; each shard's [P, M]
+           fitness moments psum-reduce across this axis (two-pass
+           protocol, so every registered kernel — pearson/r2 included —
+           shards here). Rows that don't divide `data` are zero-weight
+           padded by `GPSession.ingest`, so any row count is legal.
+    model  shards the population (op/arg int32[P, N] split on P);
+           selection all_gathers the pod's fitness + parent pool (tiny
+           next to evaluation).
+    pod    runs independent island populations with periodic elite
+           migration (`migrate_every`/`migrate_k` in GPConfig).
+
+    Purely declarative — `build()` materializes the jax Mesh; GPSession
+    calls it lazily and keeps all PartitionSpec plumbing internal."""
 
     data: int = 1
     model: int = 1
     pod: int = 1
 
     def build(self):
+        """Materialize the jax.sharding.Mesh (host-local devices)."""
         from repro.launch.mesh import make_host_mesh
 
         return make_host_mesh(data=self.data, model=self.model, pod=self.pod)
@@ -95,7 +110,17 @@ def make_config(config: GPConfig | None = None, **overrides) -> GPConfig:
 
 
 class GPSession:
-    """Owns one GP run: config + backend + topology + state + loop."""
+    """Owns one GP run: config + backend + topology + state + loop.
+
+    Lifecycle: `ingest(X, y)` → `init(key=)` → `evolve(n)` (or `fit`,
+    which chains all three). `state` is the device-resident GPState
+    pytree (population int32[P, N] op/arg pairs, f32[P] fitness,
+    champion tree + f32 best_fitness, int32 generation); properties
+    `generation`/`best_fitness` read it back (one host sync each), while
+    `history` (floats, one per generation run) and `stats`
+    ('host_syncs'/'blocks' counters) are host-side and free to read.
+    Keyword overrides (pop_size=, kernel=, max_depth=, ...) land on the
+    right nested GPConfig dataclass via `make_config`."""
 
     def __init__(self, config: GPConfig | None = None, *, backend: str | None = None,
                  topology: "MeshTopology | object | None" = None,
@@ -195,9 +220,16 @@ class GPSession:
     # --- lifecycle -----------------------------------------------------------
 
     def ingest(self, X, y, *, layout: str = "rows") -> "GPSession":
-        """Load the dataset. layout='rows' is sklearn-style [rows, features]
-        (transposed to the paper's feature-major Eq. 2 form internally);
-        layout='features' accepts already-transposed [features, rows]."""
+        """Load the dataset onto the session's devices. layout='rows' is
+        sklearn-style [rows, features] float data (transposed to the
+        paper's feature-major f32[F, D] Eq. 2 form internally);
+        layout='features' accepts already-transposed [features, rows].
+        y is f32[D] targets (class ids as floats for the 'c' kernel). On
+        a mesh, rows that don't divide the data axis are padded with a
+        zero-weight mask (fitness stays exact; `n_rows` reports the real
+        count) and X/y/weight are device_put sharded; single-device
+        jittable backends get plain device arrays; host-only backends
+        keep numpy. Synchronous host work only — no device compute."""
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float32)
         if layout == "rows":
@@ -439,7 +471,12 @@ class GPSession:
             target = self._gen_host + total
             quantum = self._block_quantum(total)
             while self._gen_host < target:
-                K = self._block_span(target - self._gen_host)
+                # K never exceeds the compiled block length: with
+                # stop_fitness armed but no period, span = remaining >
+                # quantum, and an uncapped K would misread the full
+                # block (ran == quantum < K) as an early-stop freeze
+                # and silently truncate the run
+                K = min(self._block_span(target - self._gen_host), quantum)
                 prev_gen = self._gen_host
                 _, history = self._dispatch_block(quantum, K)
                 # ONE sync per block: final generation counter + the
@@ -483,6 +520,9 @@ class GPSession:
     # --- results -------------------------------------------------------------
 
     def best_expression(self) -> str:
+        """The champion tree decoded to an infix string (feature names
+        substituted when the session has them). Reads best_op/best_arg
+        back from the device — one host sync."""
         self._require_state()
         return to_string(np.asarray(self.state.best_op),
                          np.asarray(self.state.best_arg),
@@ -490,7 +530,10 @@ class GPSession:
                          const_table=np.asarray(self._cfg.tree_spec.const_table()))
 
     def predict(self, X, *, layout: str = "rows") -> np.ndarray:
-        """Best tree evaluated on new data, via this session's backend."""
+        """Best tree evaluated on new data via this session's backend:
+        X [rows, features] (or [features, rows] with layout='features')
+        -> f32[rows] predictions, copied back to the host (one sync).
+        Single-device only — prediction is one tree, never worth a mesh."""
         self._require_state()
         X = np.asarray(X, np.float32)
         X_fm = feature_major(X) if layout == "rows" else X
@@ -500,9 +543,9 @@ class GPSession:
         return np.asarray(preds)[0]
 
     def score(self, X, y, *, layout: str = "rows") -> float:
-        """The fitness kernel's human-facing metric of the best tree on
-        (X, y) — fraction correct for classify/match, mean |err| for
-        regression, etc."""
+        """The fitness kernel's human-facing metric (FitnessKernel.metric)
+        of the best tree on (X, y) — fraction correct for classify/match,
+        mean |err| for regression, R² for r2 — as a host float (syncs)."""
         preds = self.predict(X, layout=layout)
         metric = fit.get_kernel(self._cfg.fitness.kernel).metric(
             jnp.asarray(preds)[None], jnp.asarray(y, jnp.float32), self._cfg.fitness)

@@ -98,15 +98,18 @@ def _eval_fitness_kernel(op_ref, arg_ref, x_ref, y_ref, w_ref, const_ref, out_re
         vals = jnp.where(opd == prim.EMPTY, 0.0, node)
     preds = vals[:, 0]  # [Pb, Db]
 
-    # ---- fused fitness partial (w masks out data padding) -------------------
-    # The reduction is the registered FitnessKernel's partial_fitness (pure
-    # jnp, so it traces inside the Pallas body); tile partials accumulate
-    # across the data grid, which is why only decomposable kernels may
-    # reach this path (ops.fitness enforces that).
+    # ---- fused moment partial (w masks out data padding) --------------------
+    # Phase 1 of the two-pass protocol: the registered FitnessKernel's
+    # `moments` (pure jnp, so it traces inside the Pallas body) runs in the
+    # same w_ref-masked inner loop as the evaluation, and the [Pb, M]
+    # moment partials accumulate across the data grid. Decomposable
+    # kernels are the M=1 case (their moment IS the fitness partial);
+    # two-pass kernels (pearson, r2) finalize in ops.fitness after the
+    # grid sum — so every kernel runs fused, on any data tiling.
     y = y_ref[...]  # f32[Db]
     wgt = w_ref[...]  # f32[Db]
     spec = fit.FitnessSpec(kernel, n_classes=n_classes, precision=precision)
-    partial = fit.get_kernel(kernel).partial_fitness(preds, y, wgt, spec)
+    partial = fit.get_kernel(kernel).moments(preds, y, wgt, spec)  # [Pb, M]
 
     # accumulate across data tiles (innermost grid dim revisits out block)
     @pl.when(j == 0)
@@ -122,7 +125,7 @@ def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
                         kernel: str = "r", n_classes: int = 3, precision: float = 1e-4,
                         gather: str = "onehot", pop_tile: int = 8, data_tile: int = 1024,
                         interpret: bool | None = None, fn_codes=None):
-    """Fused eval+fitness over pre-padded inputs.
+    """Fused eval+moments over pre-padded inputs.
 
     op, arg:  int32[P, N]   P % pop_tile == 0
     X:        f32[F, D]     D % data_tile == 0
@@ -130,13 +133,17 @@ def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
                             both the wrapper's tile padding AND any dataset
                             padding the caller threaded in (loader.pad_rows),
                             composed upstream in ops.fitness
-    returns   f32[P] fitness partial-sum (minimize)
+    returns   f32[P, M]     the kernel's fully-accumulated weighted moments
+                            (M = FitnessKernel.n_moments; for decomposable
+                            kernels M == 1 and [:, 0] is the fitness);
+                            finalize with FitnessKernel.reduce_moments
     """
     P, N = op.shape
     F, D = X.shape
     assert P % pop_tile == 0 and D % data_tile == 0, (P, D, pop_tile, data_tile)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    n_moments = fit.get_kernel(kernel).n_moments
 
     grid = (P // pop_tile, D // data_tile)
     body = functools.partial(
@@ -154,8 +161,8 @@ def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
             pl.BlockSpec((data_tile,), lambda i, j: (j,)),
             pl.BlockSpec((const_table.shape[0],), lambda i, j: (0,)),
         ],
-        out_specs=pl.BlockSpec((pop_tile,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
+        out_specs=pl.BlockSpec((pop_tile, n_moments), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, n_moments), jnp.float32),
         interpret=interpret,
     )(op, arg, X.astype(jnp.float32), y.astype(jnp.float32),
       weight.astype(jnp.float32), const_table.astype(jnp.float32))

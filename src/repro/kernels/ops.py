@@ -1,9 +1,17 @@
-"""Jitted public wrapper for the GP eval+fitness kernel.
+"""Jitted public wrappers for the GP eval+fitness kernel.
 
 Handles padding (population to pop_tile, data to data_tile with a zero
 weight mask), picks the terminal-gather strategy, and sizes the data tile
-to a VMEM budget. `impl="jnp"` falls through to the oracle so callers
-(engine, benchmarks) can flip implementations with one flag.
+to a VMEM budget. Two surfaces:
+
+    fitness(...)  f32[P] finalized fitness — phase 1 moments accumulated
+                  across the Pallas data grid, phase 2 reduce on the
+                  result (a [P, M] @ tiny elementwise epilogue)
+    moments(...)  f32[P, M] phase-1 moments only — what a mesh step
+                  `psum`s across the data axis before finalizing
+
+`impl="jnp"` falls through to the oracle so callers (engine, benchmarks)
+can flip implementations with one flag.
 """
 from __future__ import annotations
 
@@ -45,25 +53,12 @@ def pick_tiles(n_features: int, n_nodes: int, pop: int, data: int,
     return pop_tile, Db, gather
 
 
-@partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
-                                   "gather", "impl", "interpret"))
-def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
-            *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
-            gather: str | None = None, impl: str = "pallas",
-            interpret: bool | None = None):
-    """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D]).
-
-    `weight` is an optional f32[D] mask (0.0 on dataset-padding points,
-    e.g. from data/loader.pad_rows); it composes with the kernel's own
-    data-tile padding mask so padded datasets score exactly."""
-    from repro.core.fitness import get_kernel
-
-    if impl == "jnp" or not get_kernel(fit_spec.kernel).decomposable:
-        # non-decomposable kernels (e.g. pearson) can't accumulate partials
-        # across the Pallas data grid — serve them from the reference path
-        return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
-                                weight=weight)
-
+def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
+                    fit_spec: FitnessSpec, weight, data_tile: int, pop_tile: int,
+                    gather: str | None, interpret: bool | None):
+    """Pad to tile multiples and run the fused kernel: f32[P, M] moments.
+    Padded data points carry weight 0.0, so every moment they touch is an
+    exact 0.0 and the grid accumulation stays padding-invariant."""
     P, N = op.shape
     F, D = X.shape
     pop_tile, data_tile, gather = pick_tiles(F, N, P, D, pop_tile, data_tile, gather)
@@ -87,3 +82,47 @@ def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSp
         data_tile=data_tile, interpret=interpret,
         fn_codes=tuple(int(c) for c in tree_spec.fn_set.opcodes))
     return out[:P]
+
+
+@partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
+                                   "gather", "interpret"))
+def moments(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
+            *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
+            gather: str | None = None, interpret: bool | None = None):
+    """f32[P, M] phase-1 moments of every tree against (X:[F,D], y:[D]),
+    fused with evaluation on the Pallas path. Sum with the other shards'
+    moments (e.g. `lax.psum` on the mesh data axis), then finalize with
+    `get_kernel(fit_spec.kernel).reduce_moments`."""
+    from repro.core.fitness import get_kernel
+
+    if get_kernel(fit_spec.kernel).moments is None:
+        raise ValueError(f"fitness kernel {fit_spec.kernel!r} defines no moment "
+                         f"pass; it cannot accumulate across data tiles/shards")
+    return _moments_padded(op, arg, X, y, const_table, tree_spec, fit_spec,
+                           weight, data_tile, pop_tile, gather, interpret)
+
+
+@partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
+                                   "gather", "impl", "interpret"))
+def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
+            *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
+            gather: str | None = None, impl: str = "pallas",
+            interpret: bool | None = None):
+    """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D]).
+
+    `weight` is an optional f32[D] mask (0.0 on dataset-padding points,
+    e.g. from data/loader.pad_rows); it composes with the kernel's own
+    data-tile padding mask so padded datasets score exactly. Every
+    registered kernel with a moment pass — decomposable one-moment
+    objectives and two-pass statistics (pearson, r2) alike — runs the
+    fused Pallas grid; only legacy kernels registered without moments
+    fall back to the un-tiled reference path."""
+    from repro.core.fitness import get_kernel
+
+    kern = get_kernel(fit_spec.kernel)
+    if impl == "jnp" or kern.moments is None:
+        return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
+                                weight=weight)
+    m = _moments_padded(op, arg, X, y, const_table, tree_spec, fit_spec,
+                        weight, data_tile, pop_tile, gather, interpret)
+    return kern.reduce_moments(m, fit_spec)

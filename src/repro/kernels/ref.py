@@ -2,7 +2,9 @@
 
 Numerically identical contract to kernels/ops.fitness (same padding/
 weighting semantics) but built from the reference evaluator — the HBM-
-streaming path the kernel is measured against.
+streaming path the kernel is measured against. Both the finalized
+fitness and the phase-1 moment pass (`moments_ref*`, what the mesh step
+psums across the data axis) are exposed.
 """
 from __future__ import annotations
 
@@ -24,22 +26,34 @@ def fitness_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: Fitne
     return fitness_from_preds(preds, y, fit_spec, weight=weight)
 
 
-def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
+def moments_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
+                weight=None):
+    """Phase 1 of the two-pass protocol on the reference evaluator:
+    f32[P, M] weighted moment partials of the population against
+    (X:[F,D], y:[D]). Partials from different data tiles/shards sum
+    element-wise; `FitnessKernel.reduce_moments` finalizes."""
+    preds = evaluate_population(op, arg, X, const_table, tree_spec)  # [P, D]
+    from repro.core.fitness import moments_from_preds
+
+    return moments_from_preds(preds, y, fit_spec, weight=weight)
+
+
+def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
                       fit_spec: FitnessSpec, weight=None, tile: int = 65536):
-    """Same contract, but scans the data dimension in tiles so the
+    """`moments_ref`, scanning the data dimension in tiles so the
     [pop, nodes, data] evaluation buffer never exceeds one tile — the jnp
     analogue of the Pallas kernel's VMEM tiling. A caller-supplied `weight`
     (dataset padding mask, weight 0 on padded points) composes with the
-    internal tile-padding mask. Kernels that are not sum-decomposable over
-    data (FitnessKernel.decomposable=False) fall back to the un-tiled
-    path."""
+    internal tile-padding mask; moments of zero-weight points are exact
+    zeros, so tiling never changes the result."""
     import jax
 
     from repro.core.fitness import get_kernel
 
+    kern = get_kernel(fit_spec.kernel)
     D = X.shape[1]
-    if D <= tile or not get_kernel(fit_spec.kernel).decomposable:
-        return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
+    if D <= tile:
+        return moments_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
                            weight=weight)
     pad = (-D) % tile
     w = jnp.ones((D,), jnp.float32) if weight is None else weight.astype(jnp.float32)
@@ -54,9 +68,28 @@ def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
 
     def body(acc, inp):
         Xt, yt, wt = inp
-        return acc + fitness_ref(op, arg, Xt, yt, const_table, tree_spec, fit_spec,
-                                 weight=wt), None
+        return acc + moments_ref(op, arg, Xt, yt, const_table, tree_spec,
+                                 fit_spec, weight=wt), None
 
-    out, _ = jax.lax.scan(body, jnp.zeros((op.shape[0],), jnp.float32),
-                          (Xs, ys, ws))
+    out, _ = jax.lax.scan(
+        body, jnp.zeros((op.shape[0], kern.n_moments), jnp.float32), (Xs, ys, ws))
     return out
+
+
+def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
+                      fit_spec: FitnessSpec, weight=None, tile: int = 65536):
+    """Same contract as `fitness_ref`, tiled over data: accumulate the
+    kernel's moment partials per tile, then finalize once — so EVERY
+    registered kernel tiles, including two-pass objectives (pearson, r2)
+    whose statistics need the whole dataset. Kernels registered without a
+    moment pass (legacy decomposable=False objectives) fall back to the
+    un-tiled path."""
+    from repro.core.fitness import get_kernel
+
+    kern = get_kernel(fit_spec.kernel)
+    if X.shape[1] <= tile or kern.moments is None:
+        return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
+                           weight=weight)
+    m = moments_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec,
+                          weight=weight, tile=tile)
+    return kern.reduce_moments(m, fit_spec)

@@ -144,6 +144,21 @@ def test_raw_evolve_block_then_evolve_stays_coherent():
     assert s2.generation == 1  # resynced, not 5 + garbage
 
 
+def test_unreached_stop_fitness_runs_all_generations():
+    """An armed-but-never-reached stop_fitness must not shorten the run:
+    the block span is capped at the compiled quantum (_STOP_CHECK_SPAN),
+    so `ran < K` only ever signals a real on-device freeze — previously
+    K could exceed the dispatched block length and a full 32-step block
+    was misread as an early stop, silently truncating generations."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=16, generations=100, kernel="r", backend="jnp",
+                  stop_fitness=-1.0)  # unreachable
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert s.generation == 100, s.generation
+    assert len(s.history) == 100
+    assert s.stats["blocks"] == -(-100 // GPSession._STOP_CHECK_SPAN)
+
+
 def test_stop_fitness_bounds_block_span():
     """Frozen steps still execute on-device, so with stop_fitness armed
     and no other period the session caps blocks at _STOP_CHECK_SPAN: a
@@ -177,7 +192,7 @@ def test_ragged_blocks_reuse_one_compiled_program():
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas", "scalar"])
-@pytest.mark.parametrize("kernel", ["r", "c", "m", "mse", "pearson"])
+@pytest.mark.parametrize("kernel", ["r", "c", "m", "mse", "pearson", "r2"])
 def test_padded_fitness_matches_unpadded(backend, kernel):
     """fitness on zero-weighted padded [D+r] data == fitness on the
     unpadded [D] data, for every registered kernel on every backend —
@@ -200,7 +215,7 @@ def test_padded_fitness_matches_unpadded(backend, kernel):
 
 def test_weighted_partials_all_kernels_direct():
     """FitnessKernel.partial_fitness itself ignores zero-weight points —
-    including the non-decomposable pearson kernel's global moments."""
+    including the two-pass pearson/r2 kernels' global moments."""
     rng = np.random.RandomState(1)
     preds = jnp.asarray(rng.randn(5, 64).astype(np.float32))
     y = jnp.asarray(rng.randn(64).astype(np.float32))
@@ -278,6 +293,29 @@ _SUBPROCESS_MESH_BLOCKS = textwrap.dedent("""
     sm2.fit(X_rows, y101)
     assert sm2.generation == 10 and np.isfinite(sm2.best_fitness)
     assert sm2.stats["host_syncs"] == 1, sm2.stats
+
+    # two-pass kernels (pearson, r2) on the mesh data axis: psum'd moments
+    # + reduce must match the single-device fitness, on unpadded (128) and
+    # padded ragged (101 -> 104 on data=4) datasets alike. pearson's
+    # tolerance is looser: moment-form variances amplify f32 rounding when
+    # the psum's shard order differs from the single pass.
+    tol = {"pearson": 5e-3, "r2": 1e-4}
+    for kern in ("pearson", "r2"):
+        for rows in (128, 101):
+            Xr, yr = np.ascontiguousarray(Xk.T)[:rows], yk[:rows]
+            sm = GPSession(pop_size=32, generations=1, kernel=kern,
+                           topology=MeshTopology(data=4, model=2))
+            sm.ingest(Xr, yr)
+            sm.init(key=jax.random.PRNGKey(3))
+            sm.step()
+            ss = GPSession(pop_size=32, generations=1, kernel=kern, backend="jnp")
+            ss.ingest(Xr, yr)
+            ss.init(key=jax.random.PRNGKey(3))
+            ss.step()
+            np.testing.assert_allclose(
+                np.asarray(sm.state.fitness), np.asarray(ss.state.fitness),
+                rtol=tol[kern], atol=tol[kern],
+                err_msg="mesh-vs-single %s rows=%d" % (kern, rows))
     print("MESH_BLOCKS_OK")
 """)
 

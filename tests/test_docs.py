@@ -1,0 +1,77 @@
+"""Docs are part of the system: every relative Markdown link and anchor in
+README, ROADMAP, and docs/ must resolve. Runs standalone (no repro import,
+no network) so the CI `docs` job can execute exactly this file; external
+http(s) links are out of scope by design — the check must never flake on
+someone else's server."""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = sorted(
+    p for p in [ROOT / "README.md", ROOT / "ROADMAP.md",
+                *(ROOT / "docs").glob("*.md")] if p.exists())
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^(```|~~~)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def _strip_fences(text: str) -> str:
+    """Drop fenced code blocks — `[idx](call)`-shaped code is not a link."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def _github_slug(heading: str) -> str:
+    """GitHub's anchor slugger: inline code/emphasis markers dropped,
+    lowercase, spaces to hyphens, punctuation removed."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def _anchors(path: pathlib.Path) -> set:
+    return {_github_slug(m.group(1))
+            for line in _strip_fences(path.read_text()).splitlines()
+            if (m := _HEADING.match(line))}
+
+
+def _links(path: pathlib.Path) -> list:
+    return _LINK.findall(_strip_fences(path.read_text()))
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: str(p.relative_to(ROOT)))
+def test_relative_links_and_anchors_resolve(doc):
+    bad = []
+    for link in _links(doc):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue  # external: out of scope, never flake on the network
+        target, _, anchor = link.partition("#")
+        target_path = (doc if not target
+                       else (doc.parent / target).resolve())
+        if not target_path.exists():
+            bad.append(f"{link}: file {target!r} does not exist")
+            continue
+        if anchor and target_path.suffix == ".md":
+            if anchor not in _anchors(target_path):
+                bad.append(f"{link}: no heading slugs to {anchor!r} in "
+                           f"{target_path.name}")
+    assert not bad, f"{doc.name}: broken links:\n  " + "\n  ".join(bad)
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    """The docs/ subsystem ships with the repo and is reachable from the
+    front page (ISSUE 3 acceptance criterion)."""
+    for name in ("architecture.md", "fitness-kernels.md"):
+        assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"
+    readme_links = _links(ROOT / "README.md")
+    assert any("docs/architecture.md" in l for l in readme_links)
+    assert any("docs/fitness-kernels.md" in l for l in readme_links)

@@ -78,12 +78,60 @@ def test_backend_parity_with_nan_data(fixed_population):
 
 
 def test_kernel_registry_contents():
-    assert {"r", "c", "m", "mse", "pearson"} <= set(available_kernels())
+    assert {"r", "c", "m", "mse", "pearson", "r2"} <= set(available_kernels())
     assert fit.get_kernel("regression") is fit.get_kernel("r")  # alias
     with pytest.raises(ValueError, match="unknown fitness kernel"):
         fit.get_kernel("nope")
     with pytest.raises(ValueError, match="already registered"):
         register_kernel(FitnessKernel(name="r", partial_fitness=None, metric=None))
+
+
+def test_two_pass_protocol_normalization():
+    """register_kernel fills in the derivable half of the protocol:
+    decomposable kernels get a derived M=1 moment pass; moment-defined
+    kernels get a derived whole-dataset partial_fitness; half-specified
+    kernels are rejected."""
+    r = fit.get_kernel("r")
+    assert r.moments is not None and r.n_moments == 1
+    preds = jnp.asarray([[1.0, 2.0], [0.0, 0.0]])
+    y, w = jnp.asarray([1.0, 1.0]), jnp.asarray([1.0, 1.0])
+    spec = FitnessSpec("r")
+    m = r.moments(preds, y, w, spec)
+    assert m.shape == (2, 1)
+    np.testing.assert_array_equal(np.asarray(r.reduce_moments(m, spec)),
+                                  np.asarray(r.partial_fitness(preds, y, w, spec)))
+    # pearson/r2 define both halves explicitly: the centered exact
+    # single-pass partial and the shardable raw-moment form must agree
+    # on well-conditioned data
+    for name in ("pearson", "r2"):
+        k = fit.get_kernel(name)
+        assert k.n_moments > 1 and not k.decomposable
+        sp = FitnessSpec(name)
+        np.testing.assert_allclose(
+            np.asarray(k.partial_fitness(preds, y, w, sp)),
+            np.asarray(k.reduce_moments(k.moments(preds, y, w, sp), sp)),
+            rtol=1e-4, atol=1e-4)
+    # a moment-only kernel gets its whole-dataset partial derived
+    if "test-meanerr" not in available_kernels():
+        register_kernel(FitnessKernel(
+            name="test-meanerr", n_moments=2, metric=None,
+            moments=lambda p, y, w, s: jnp.stack(
+                [jnp.broadcast_to(w[None, :], p.shape).sum(-1),
+                 (jnp.abs(jnp.nan_to_num(p) - y[None, :])
+                  * w[None, :]).sum(-1)], axis=-1),
+            reduce_moments=lambda m, s: m[..., 1] / jnp.maximum(m[..., 0], 1.0)))
+    k = fit.get_kernel("test-meanerr")
+    assert not k.decomposable and k.partial_fitness is not None
+    np.testing.assert_allclose(
+        np.asarray(k.partial_fitness(preds, y, w, FitnessSpec("test-meanerr"))),
+        np.asarray(k.reduce_moments(
+            k.moments(preds, y, w, FitnessSpec("test-meanerr")),
+            FitnessSpec("test-meanerr"))))
+    with pytest.raises(ValueError, match="reduce_moments"):
+        register_kernel(FitnessKernel(name="test-half", metric=None,
+                                      moments=lambda p, y, w, s: None))
+    with pytest.raises(ValueError, match="partial_fitness or moments"):
+        register_kernel(FitnessKernel(name="test-empty", metric=None))
 
 
 def test_nan_never_wins_any_kernel():
@@ -126,14 +174,70 @@ def test_custom_kernel_plugs_into_engine():
     assert len(sess.history) == 2
 
 
-def test_non_decomposable_kernel_rejected_on_mesh():
+def test_two_pass_kernels_accepted_on_mesh():
+    """pearson/r2 moments psum across the data axis — the old
+    'not sum-decomposable' rejection is gone. Only a kernel registered
+    with NO moment pass at all (legacy full-data objective) stays
+    single-device, with a clear error."""
     from repro.core.engine import GPConfig, sharded_evolve_step
     from repro.launch.mesh import make_host_mesh
 
-    cfg = GPConfig(pop_size=8, fitness=FitnessSpec("pearson"))
     mesh = make_host_mesh(data=1, model=1)
-    with pytest.raises(ValueError, match="not sum-decomposable"):
-        sharded_evolve_step(cfg, mesh)
+    for kernel in ("pearson", "r2"):
+        step, specs = sharded_evolve_step(
+            GPConfig(pop_size=8, fitness=FitnessSpec(kernel)), mesh)
+        assert callable(step)
+
+    name = "test-legacy-full"
+    if name not in available_kernels():
+        register_kernel(FitnessKernel(
+            name=name, decomposable=False,
+            partial_fitness=lambda p, y, w, spec: jnp.zeros(p.shape[0]),
+            metric=lambda p, y, spec: jnp.zeros(p.shape[0])))
+    assert fit.get_kernel(name).moments is None
+    with pytest.raises(ValueError, match="moment pass"):
+        sharded_evolve_step(GPConfig(pop_size=8, fitness=FitnessSpec(name)), mesh)
+
+
+def test_correlation_kernels_degenerate_trees():
+    """Two failure modes the moment form must not mismeasure: a
+    CONSTANT-prediction tree (zero variance — cancellation noise must
+    not crown it r²=1/perfect) and a tree with an inf prediction at a
+    valid point (must be +inf fitness, never NaN — NaN wins argmin)."""
+    rng = np.random.RandomState(0)
+    y = jnp.asarray((5 + rng.randn(512)).astype(np.float32))
+    const = jnp.full((1, 512), 3.0)
+    good = y[None, :] * 1.001
+    k = fit.get_kernel("pearson")
+    spec = FitnessSpec("pearson")
+    # moments summed across 4 simulated shards, then reduced
+    m = sum(k.moments(jnp.concatenate([const, good])[:, i * 128:(i + 1) * 128],
+                      y[i * 128:(i + 1) * 128], jnp.ones(128), spec)
+            for i in range(4))
+    f = np.asarray(k.reduce_moments(m, spec))
+    assert f[0] > 0.99, f"constant tree scored as correlated: {f[0]}"
+    assert f[1] < 0.01, f"near-perfect tree mis-scored: {f[1]}"
+
+    inf_preds = y[None, :] * jnp.asarray(
+        np.where(np.arange(512) == 7, np.inf, 1.0), jnp.float32)
+    for name in ("pearson", "r2"):
+        s = FitnessSpec(name)
+        kk = fit.get_kernel(name)
+        for f in (fit.fitness_from_preds(inf_preds, y, s),
+                  kk.reduce_moments(fit.moments_from_preds(inf_preds, y, s), s)):
+            f = np.asarray(f)
+            assert np.isposinf(f).all(), f"{name}: inf pred gave {f}, not +inf"
+
+
+def test_r2_kernel_end_to_end():
+    """The kernel registered purely through moments/reduce_moments drives
+    a whole single-device run — registry, engine, selection, score."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=24, generations=4, kernel="r2", backend="jnp")
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert np.isfinite(s.best_fitness) and s.best_fitness >= 0.0
+    assert len(s.history) == 4
+    assert s.score(X_rows, y) <= 1.0  # metric is R² (1 = perfect)
 
 
 # --- GPSession front door ----------------------------------------------------
