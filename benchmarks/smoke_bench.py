@@ -8,6 +8,14 @@ comparable generations/sec artifact:
 
     PYTHONPATH=src python benchmarks/smoke_bench.py --out BENCH_loop.json
 
+`--bench islands` times the island-model layout instead — 1 island of
+256 trees vs 4 heterogeneous islands of 64 (same total trees, same
+data), so the artifact (`BENCH_islands.json`) tracks what the
+island-batched step costs over the classic layout:
+
+    PYTHONPATH=src python benchmarks/smoke_bench.py --bench islands \
+        --out BENCH_islands.json
+
 The numbers are NOT cross-machine comparable (CI runners vary); the
 artifact records the machine-free quantities too (generations, rows,
 pop, host syncs) so a trajectory can be assembled from like runners.
@@ -22,7 +30,7 @@ import time
 import jax
 
 from repro.data.datasets import kat7
-from repro.gp import GPSession
+from repro.gp import GPSession, OperatorMix
 
 # the paper's 875x axis: KAT-7 shape at 90k rows (§3.5, Fig. 3)
 ROWS = 90_000
@@ -69,15 +77,71 @@ def bench_loop(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
     }
 
 
+def bench_islands(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
+                  depth: int = 5, seed: int = 0, islands: int = 4) -> dict:
+    """1 island of `pop` trees vs `islands` heterogeneous islands of
+    `pop // islands` — same total trees, same data, same generations —
+    each timed as one warm evolution block. The heterogeneous variant
+    spreads exploration/exploitation mixes across islands and ring-
+    migrates elites every 3 generations."""
+    X_rows, y, meta = kat7(rows=rows)
+    mixes = (OperatorMix(),  # Table 2 baseline
+             OperatorMix(0.05, 0.05, 0.05, 0.85),  # crossover-heavy
+             OperatorMix(0.10, 0.30, 0.30, 0.30),  # mutation-heavy
+             OperatorMix(0.30, 0.10, 0.10, 0.50))  # reproduction-heavy
+    variants = {}
+    for n_isl in (1, islands):
+        kw = dict(islands=n_isl)
+        if n_isl > 1:
+            kw.update(migrate_every=3, migrate_k=2,
+                      island_mixes=mixes[:n_isl],
+                      island_tourn_sizes=tuple(4 + 3 * i for i in range(n_isl)))
+        sess = GPSession(pop_size=pop // n_isl, max_depth=depth, n_consts=8,
+                         kernel=meta["kernel"], n_classes=meta["n_classes"],
+                         backend="jnp", generations=gens, **kw)
+        sess.ingest(X_rows, y)
+        sess.init(key=jax.random.PRNGKey(seed))
+        sess.evolve_block(gens)  # compile
+        jax.block_until_ready(sess.state.fitness)
+        sess.init(key=jax.random.PRNGKey(seed))
+        t0 = time.perf_counter()
+        _, history = sess.evolve_block(gens)
+        jax.block_until_ready(history)
+        run_s = time.perf_counter() - t0
+        variants[f"islands_{n_isl}"] = {
+            "islands": n_isl,
+            "pop_per_island": pop // n_isl,
+            "warm_s": round(run_s, 4),
+            "generations_per_sec": round(gens / run_s, 4),
+            "best_fitness": float(jax.numpy.min(sess.state.best_fitness)),
+        }
+    return {
+        "bench": "islands",
+        "backend": "jnp",
+        "total_pop": pop,
+        "rows": rows,
+        "depth": depth,
+        "generations": gens,
+        "topology": "ring",
+        **variants,
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="loop", choices=["loop", "islands"])
     ap.add_argument("--pop", type=int, default=POP)
     ap.add_argument("--rows", type=int, default=ROWS)
     ap.add_argument("--gens", type=int, default=GENS)
-    ap.add_argument("--out", default="BENCH_loop.json")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    rec = bench_loop(pop=args.pop, rows=args.rows, gens=args.gens)
-    with open(args.out, "w") as f:
+    fn = bench_loop if args.bench == "loop" else bench_islands
+    rec = fn(pop=args.pop, rows=args.rows, gens=args.gens)
+    out = args.out or f"BENCH_{args.bench}.json"
+    with open(out, "w") as f:
         json.dump(rec, f, indent=1)
     print(json.dumps(rec, indent=1))
 

@@ -7,7 +7,9 @@ from repro.core.engine import (  # noqa: F401
     GPConfig, GPState, evolve_block, evolve_step, init_state, run,
     sharded_evolve_block, sharded_evolve_step,
 )
+from repro.core.evolve import OperatorMix  # noqa: F401
 from repro.core.fitness import (  # noqa: F401
     FitnessKernel, FitnessSpec, available_kernels, get_kernel, register_kernel,
 )
+from repro.core.islands import IslandConfig  # noqa: F401
 from repro.core.trees import TreeSpec  # noqa: F401

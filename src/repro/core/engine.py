@@ -37,15 +37,24 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.core import evolve as ev
 from repro.core import fitness as fit
+from repro.core.islands import IslandConfig
 from repro.core.trees import TreeSpec, generate_population
 
 
 @dataclasses.dataclass(frozen=True)
 class GPConfig:
-    """Run-time parameters (paper Table 2 defaults)."""
+    """Run-time parameters (paper Table 2 defaults).
+
+    `island` is the first-class population layout: `islands > 1` makes
+    every run `I` islands of `pop_size` trees (`op: int32[I, P, N]`) on
+    ANY topology — vmapped on one device, sharded over the mesh pod axis,
+    or both (see core/islands.py). `migrate_every`/`migrate_k` are legacy
+    flat aliases kept for the pre-island surface: setting them away from
+    their defaults folds them into `island`, and after construction they
+    always mirror `island.migrate_every`/`island.migrate_k`."""
 
     name: str = "karoo"
-    pop_size: int = 100
+    pop_size: int = 100  # trees per island (total when islands == 1)
     tree_spec: TreeSpec = TreeSpec()
     fitness: fit.FitnessSpec = fit.FitnessSpec()
     mix: ev.OperatorMix = ev.OperatorMix()
@@ -56,17 +65,47 @@ class GPConfig:
     stop_fitness: float | None = None  # early termination threshold (run())
     eval_impl: str = "jnp"  # any jittable name in repro.gp.backends
     data_tile: int = 1024  # pallas data-tile (lane-dim multiple of 128)
-    migrate_every: int = 10  # pod-axis island migration period
-    migrate_k: int = 4  # elites exchanged per migration
+    island: IslandConfig = IslandConfig()  # population layout + migration
+    migrate_every: int = 10  # legacy alias for island.migrate_every
+    migrate_k: int = 4  # legacy alias for island.migrate_k
+
+    def __post_init__(self):
+        # fold a non-default flat alias into `island` ONLY where the
+        # island itself still holds the default — an explicit
+        # IslandConfig value always wins, so replacing the island on a
+        # config that once used the alias can't resurrect the old value
+        isl = self.island
+        if self.migrate_every != 10 and isl.migrate_every == 10:
+            isl = dataclasses.replace(isl, migrate_every=self.migrate_every)
+        if self.migrate_k != 4 and isl.migrate_k == 4:
+            isl = dataclasses.replace(isl, migrate_k=self.migrate_k)
+        object.__setattr__(self, "island", isl)
+        object.__setattr__(self, "migrate_every", isl.migrate_every)
+        object.__setattr__(self, "migrate_k", isl.migrate_k)
 
     def __hash__(self):
         return hash((self.name, self.pop_size, self.tree_spec, self.fitness, self.mix,
                      self.tourn_size, self.generations, self.elitism, self.parsimony,
                      self.stop_fitness, self.eval_impl,
-                     self.data_tile, self.migrate_every, self.migrate_k))
+                     self.data_tile, self.island))
 
 
 class GPState(NamedTuple):
+    """Engine state pytree. With the classic single-population layout
+    (islands == 1) the shapes are the un-batched legacy ones; with
+    `GPConfig.island.islands == I > 1` every population leaf grows a
+    leading island axis (`generation` stays a shared scalar — islands
+    advance in lockstep):
+
+                      islands == 1      islands == I
+        key           uint32[2]         uint32[I, 2]   (fold_in(i) at init)
+        op/arg        int32[P, N]       int32[I, P, N]
+        fitness       f32[P]            f32[I, P]
+        best_op/arg   int32[N]          int32[I, N]    (per-island champion)
+        best_fitness  f32[]             f32[I]
+        generation    int32[]           int32[]
+    """
+
     key: jax.Array
     op: jax.Array  # int32[P, N]
     arg: jax.Array  # int32[P, N]
@@ -112,21 +151,45 @@ def _eval_moments(cfg: GPConfig, op, arg, X, y, weight, const_table):
 
 def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
     """Fresh state; `seeds` (expression strings) populate the first slots —
-    Karoo's customized seed populations (paper §2.2)."""
+    Karoo's customized seed populations (paper §2.2). With
+    `cfg.island.islands > 1` the state is island-batched (see GPState):
+    every island draws its own decorrelated population and PRNG key via
+    `fold_in(island_idx)`; seeds populate the first slots of EVERY island
+    (the random filler still differs per island)."""
     k0, k1 = jax.random.split(key)
-    if seeds:
-        from repro.core.parse import seed_population
+    I = cfg.island.islands
 
-        op, arg = seed_population(seeds, cfg.tree_spec, cfg.pop_size, k1,
-                                  feature_names)
-    else:
-        op, arg = generate_population(k1, cfg.pop_size, cfg.tree_spec)
+    def one_island(kk):
+        if seeds:
+            from repro.core.parse import seed_population
+
+            return seed_population(seeds, cfg.tree_spec, cfg.pop_size, kk,
+                                   feature_names)
+        return generate_population(kk, cfg.pop_size, cfg.tree_spec)
+
     N = cfg.tree_spec.num_nodes
+    if I == 1:
+        op, arg = one_island(k1)
+        return GPState(
+            key=k0, op=op, arg=arg,
+            fitness=jnp.full((cfg.pop_size,), jnp.inf, jnp.float32),
+            best_op=jnp.zeros((N,), jnp.int32), best_arg=jnp.zeros((N,), jnp.int32),
+            best_fitness=jnp.asarray(jnp.inf, jnp.float32),
+            generation=jnp.asarray(0, jnp.int32),
+        )
+    if cfg.island.migrate_k > cfg.pop_size:
+        raise ValueError(f"migrate_k {cfg.island.migrate_k} exceeds the "
+                         f"per-island pop_size {cfg.pop_size}")
+    pairs = [one_island(jax.random.fold_in(k1, i)) for i in range(I)]
+    keys = jnp.stack([jax.random.fold_in(k0, i) for i in range(I)])
     return GPState(
-        key=k0, op=op, arg=arg,
-        fitness=jnp.full((cfg.pop_size,), jnp.inf, jnp.float32),
-        best_op=jnp.zeros((N,), jnp.int32), best_arg=jnp.zeros((N,), jnp.int32),
-        best_fitness=jnp.asarray(jnp.inf, jnp.float32),
+        key=keys,
+        op=jnp.stack([p[0] for p in pairs]),
+        arg=jnp.stack([p[1] for p in pairs]),
+        fitness=jnp.full((I, cfg.pop_size), jnp.inf, jnp.float32),
+        best_op=jnp.zeros((I, N), jnp.int32),
+        best_arg=jnp.zeros((I, N), jnp.int32),
+        best_fitness=jnp.full((I,), jnp.inf, jnp.float32),
         generation=jnp.asarray(0, jnp.int32),
     )
 
@@ -158,23 +221,97 @@ def _step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
                    state.generation + 1)
 
 
+def _island_tables(cfg: GPConfig):
+    """(probs f32[I, 4], tourn_max int, tourn int32[I], p_point f32[I]) —
+    the heterogeneous-search parameter arrays one compiled program vmaps
+    over (host numpy; they become constants in the jitted step)."""
+    icfg = cfg.island
+    tourn_max, tourn = icfg.tourn_table(cfg.tourn_size)
+    return (icfg.prob_table(cfg.mix), tourn_max, tourn,
+            icfg.point_rate_table())
+
+
+def _island_step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
+    """One generation of the island-batched layout on a single device:
+    evaluation runs over the flattened [I·P, N] population (one backend
+    call — no vmap over the eval kernel), selection + breeding are
+    vmapped over the island axis with per-island operator parameters,
+    and migration routes elites across the island axis
+    (islands.migrate_local). Shared verbatim by `evolve_step` and the
+    scanned `evolve_block`, like the classic body."""
+    from repro.core import islands as isl
+
+    icfg = cfg.island
+    I, P, N = state.op.shape
+    const_table = cfg.tree_spec.const_table()
+    fitness = _eval_fitness(cfg, state.op.reshape(I * P, N),
+                            state.arg.reshape(I * P, N), X, y, weight,
+                            const_table).reshape(I, P)
+
+    # per-island champion tracking on RAW fitness
+    i_best = jnp.argmin(fitness, axis=1)  # [I]
+    rows = jnp.arange(I)
+    cand_fit = fitness[rows, i_best]
+    cand_op = state.op[rows, i_best]  # [I, N]
+    cand_arg = state.arg[rows, i_best]
+    improved = cand_fit < state.best_fitness
+    best_op = jnp.where(improved[:, None], cand_op, state.best_op)
+    best_arg = jnp.where(improved[:, None], cand_arg, state.best_arg)
+    best_fit = jnp.minimum(cand_fit, state.best_fitness)
+
+    sel_fitness = fitness
+    if cfg.parsimony:
+        from repro.core.trees import tree_sizes
+
+        sizes = tree_sizes(state.op.reshape(I * P, N)).reshape(I, P)
+        sel_fitness = fitness + cfg.parsimony * sizes.astype(jnp.float32)
+
+    probs, tourn_max, tourn, p_point = _island_tables(cfg)
+    breed = ev.make_island_breeder(cfg.tree_spec, tourn_max, cfg.elitism)
+    keys, new_op, new_arg = jax.vmap(breed)(
+        state.key, state.op, state.arg, sel_fitness, jnp.asarray(probs),
+        jnp.asarray(tourn), jnp.asarray(p_point))
+
+    if icfg.migrate_k and I > 1:
+        e_op, e_arg = isl.island_elites(state.op, state.arg, fitness,
+                                        icfg.migrate_k)
+        new_op, new_arg = isl.migrate_local(icfg, new_op, new_arg, e_op, e_arg,
+                                            state.generation, cand_fit)
+    return GPState(keys, new_op, new_arg, fitness, best_op, best_arg, best_fit,
+                   state.generation + 1)
+
+
+def _step_body_any(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
+    """Layout dispatch: the legacy single-population body (bitwise the
+    pre-island path) or the island-batched body."""
+    if cfg.island.islands > 1:
+        return _island_step_body(cfg, state, X, y, weight)
+    return _step_body(cfg, state, X, y, weight)
+
+
 @partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def evolve_step(cfg: GPConfig, state: GPState, X, y, weight=None) -> GPState:
     """One generation on a single device. X: [F, D] feature-major, y: [D];
-    `weight` (f32[D] or None) masks dataset-padding points out of fitness."""
-    return _step_body(cfg, state, X, y, weight)
+    `weight` (f32[D] or None) masks dataset-padding points out of fitness.
+    Island-batched states ([I, ...] leaves, cfg.island.islands > 1) run
+    the island body; the classic layout runs the legacy body bitwise."""
+    return _step_body_any(cfg, state, X, y, weight)
 
 
 def _block_done(cfg: GPConfig, state: GPState, i, limit):
     """Branch-free freeze predicate for step `i` of a block: True once
-    `best_fitness` has reached `cfg.stop_fitness` (on-device early stop)
-    or `i` has reached the dynamic `limit` (a traced step budget that
-    lets ONE compiled fixed-length block program serve ragged block
-    boundaries — checkpoint/callback phases, final partial blocks —
-    without recompiling per distinct length)."""
+    `best_fitness` has reached `cfg.stop_fitness` (on-device early stop;
+    the min across islands for island-batched state) or `i` has reached
+    the dynamic `limit` (a traced step budget that lets ONE compiled
+    fixed-length block program serve ragged block boundaries —
+    checkpoint/callback phases, final partial blocks — without
+    recompiling per distinct length)."""
     done = jnp.asarray(False)
     if cfg.stop_fitness is not None:
-        done = state.best_fitness <= cfg.stop_fitness
+        best = state.best_fitness
+        if best.ndim:  # island-batched: any island reaching the bar stops
+            best = best.min()
+        done = best <= cfg.stop_fitness
     if limit is not None:
         done = done | (i >= limit)
     return done
@@ -192,19 +329,22 @@ def evolve_block(cfg: GPConfig, state: GPState, X, y, weight=None, limit=None, *
                  n_steps: int = 1):
     """Run up to `n_steps` generations in ONE device dispatch via `lax.scan`.
 
-    Returns (state, history) where history is the f32[n_steps] per-
-    generation `best_fitness` stream — the block's metrics ride back with
-    the state instead of forcing a host sync per generation. Steps freeze
-    into no-ops once `cfg.stop_fitness` is reached or the step index hits
-    `limit` (dynamic int32; None = run all `n_steps`), so one compiled
-    program covers every block length ≤ n_steps. The freeze is a
-    branch-free select, not a skip: frozen steps still execute the
-    generation's compute and discard it — callers bound the waste by
-    choosing n_steps (GPSession caps it at the configured period, or
-    _STOP_CHECK_SPAN when only stop_fitness is armed)."""
+    Returns (state, history) where history is the per-generation
+    `best_fitness` stream — f32[n_steps] for the classic layout,
+    f32[n_steps, I] (one column per island) for island-batched state —
+    so the block's metrics ride back with the state instead of forcing a
+    host sync per generation. Steps freeze into no-ops once
+    `cfg.stop_fitness` is reached or the step index hits `limit`
+    (dynamic int32; None = run all `n_steps`), so one compiled program
+    covers every block length ≤ n_steps. The freeze is a branch-free
+    select, not a skip: frozen steps still execute the generation's
+    compute and discard it (a frozen step's migrations are discarded
+    with it) — callers bound the waste by choosing n_steps (GPSession
+    caps it at the configured period, or _STOP_CHECK_SPAN when only
+    stop_fitness is armed)."""
 
     def body(s, i):
-        nxt = _step_body(cfg, s, X, y, weight)
+        nxt = _step_body_any(cfg, s, X, y, weight)
         done = _block_done(cfg, s, i, limit)
         if cfg.stop_fitness is not None or limit is not None:
             nxt = _freeze(done, s, nxt)
@@ -233,6 +373,50 @@ def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
 
 
 # --- mesh-sharded step --------------------------------------------------------
+
+
+def _reduce_moments_on_mesh(kern, fit_spec, partial_m, y, weight, data_axis,
+                            n_data: int):
+    """Complete phase 1 across the mesh data axis and finalize: per-shard
+    moment partials f32[P*, M] → fitness f32[P*] (replicated).
+
+    Three lowerings, picked by the kernel's protocol surface:
+
+      plain sum          `lax.psum` of the full [P*, M] payload — the
+                         classic path, bitwise what it always was for
+                         decomposable kernels.
+      + y-hoisting       the tree-independent columns (`y_moment_idx`,
+                         identical on every row) ride ONCE per shard:
+                         psum [P*, Mt] + [My] instead of [P*, M] — for
+                         pearson that is ~half the reduction bytes.
+      pairwise combine   kernels with a non-additive merge (centered
+                         moments + Chan combine): `all_gather` the
+                         per-shard partials and fold with
+                         `combine_moments` — n_data is small and the
+                         payload already shrank via hoisting.
+    """
+    if kern.combine_moments is None:
+        if not kern.y_moment_idx:
+            return kern.reduce_moments(jax.lax.psum(partial_m, data_axis),
+                                       fit_spec)
+        t_idx = jnp.asarray(kern.tree_moment_idx)
+        tree_m = jax.lax.psum(partial_m[..., t_idx], data_axis)
+        y_m = jax.lax.psum(kern.y_moments(y, weight, fit_spec), data_axis)
+        return kern.reduce_moments(fit.scatter_tree_y(kern, tree_m, y_m),
+                                   fit_spec)
+    if kern.y_moment_idx:
+        t_idx = jnp.asarray(kern.tree_moment_idx)
+        # row 0's y-columns == every row's (tree-independent by contract)
+        tree_parts = jax.lax.all_gather(partial_m[..., t_idx], data_axis)
+        y_parts = jax.lax.all_gather(
+            partial_m[0, jnp.asarray(kern.y_moment_idx)], data_axis)
+        parts = [fit.scatter_tree_y(kern, tree_parts[s], y_parts[s])
+                 for s in range(n_data)]
+    else:
+        gathered = jax.lax.all_gather(partial_m, data_axis)
+        parts = [gathered[s] for s in range(n_data)]
+    return kern.reduce_moments(fit.fold_moment_partials(kern, parts, fit_spec),
+                               fit_spec)
 
 
 def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
@@ -268,16 +452,20 @@ def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
         best_op=P(), best_arg=P(), best_fitness=P(), generation=P(),
     )
 
+    n_data = mesh.shape[data_axis]
+
     def step(state: GPState, X, y, weight) -> GPState:
         const_table = cfg.tree_spec.const_table()
         # --- evaluate, two passes: local pop shard x local data shard
-        # emits weighted moments; psum over data completes phase 1, and
-        # reduce_moments finalizes — for decomposable kernels M == 1 and
-        # this degenerates to the classic psum-of-partials
+        # emits weighted moments; the data-axis reduction completes
+        # phase 1 (psum, hoisted psum, or combine-fold — see
+        # _reduce_moments_on_mesh) and reduce_moments finalizes — for
+        # decomposable kernels M == 1 and this degenerates to the
+        # classic psum-of-partials
         partial_m = _eval_moments(cfg, state.op, state.arg, X, y, weight,
                                   const_table)
-        fitness_local = kern.reduce_moments(
-            jax.lax.psum(partial_m, data_axis), cfg.fitness)
+        fitness_local = _reduce_moments_on_mesh(kern, cfg.fitness, partial_m,
+                                                y, weight, data_axis, n_data)
         # --- selection pool = this pod's population: tiny all_gather
         fitness_g = jax.lax.all_gather(fitness_local, model_axis, tiled=True)
         op_g = jax.lax.all_gather(state.op, model_axis, tiled=True)
@@ -324,18 +512,143 @@ def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
     return step, state_specs, data_spec, y_spec, w_spec
 
 
+def _sharded_island_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
+                                 model_axis="model", pod_axis: str | None = None):
+    """Per-shard generation step for the ISLAND-BATCHED layout
+    (cfg.island.islands = I > 1): the global state is `op int32[I, P, N]`
+    with the island axis sharded over the pod axis (I_local = I / n_pods
+    islands per pod) and each island's population sharded over the model
+    axis — pods × in-device islands from one builder. Evaluation flattens
+    the local islands into one backend call; selection + breeding vmap
+    over the island axis with per-island operator parameters; migration
+    is the composed lowering (in-device roll + pod-boundary ppermute,
+    islands.migrate_sharded). Returns the same tuple contract as the
+    legacy builder."""
+    from repro.core import islands as isl
+
+    icfg = cfg.island
+    I = icfg.islands
+    kern = fit.get_kernel(cfg.fitness.kernel)
+    if kern.moments is None:
+        raise ValueError(
+            f"fitness kernel {kern.name!r} defines no moment pass "
+            f"(moments/reduce_moments), so nothing can be reduced across "
+            f"the {data_axis!r} axis; register it through the two-pass protocol "
+            f"(see docs/fitness-kernels.md) or run single-device")
+
+    n_pods = mesh.shape[pod_axis] if pod_axis else 1
+    if I % n_pods:
+        raise ValueError(f"islands {I} % pod axis {n_pods} != 0 — the pod "
+                         f"axis shards whole islands")
+    n_model = mesh.shape[model_axis]
+    if cfg.pop_size % n_model:
+        raise ValueError(f"per-island pop_size {cfg.pop_size} % model axis "
+                         f"{n_model} != 0")
+    n_local = cfg.pop_size // n_model
+    if icfg.migrate_k > n_local:
+        raise ValueError(f"migrate_k {icfg.migrate_k} exceeds the last model "
+                         f"rank's {n_local}-tree slice that receives migrants")
+    n_data = mesh.shape[data_axis]
+
+    pod = pod_axis  # None → replicated island axis (in-device islands only)
+    pop_spec = P(pod, model_axis, None)
+    data_spec = P(None, data_axis)  # X is [F, D]
+    y_spec = P(data_axis)
+    w_spec = P(data_axis)
+    state_specs = GPState(
+        key=P(pod, None), op=pop_spec, arg=pop_spec,
+        fitness=P(pod, model_axis),
+        best_op=P(pod, None), best_arg=P(pod, None),
+        best_fitness=P(pod), generation=P(),
+    )
+    probs_t, tourn_max, tourn_t, pp_t = _island_tables(cfg)
+
+    def step(state: GPState, X, y, weight) -> GPState:
+        const_table = cfg.tree_spec.const_table()
+        Il, Pl, N = state.op.shape  # per-shard: I_local, pop/model, nodes
+        partial_m = _eval_moments(cfg, state.op.reshape(Il * Pl, N),
+                                  state.arg.reshape(Il * Pl, N), X, y, weight,
+                                  const_table)
+        fitness_local = _reduce_moments_on_mesh(
+            kern, cfg.fitness, partial_m, y, weight, data_axis,
+            n_data).reshape(Il, Pl)
+        # --- selection pool = each island's own population: tiny gathers
+        fitness_g = jax.lax.all_gather(fitness_local, model_axis, axis=1,
+                                       tiled=True)  # [Il, P]
+        op_g = jax.lax.all_gather(state.op, model_axis, axis=1, tiled=True)
+        arg_g = jax.lax.all_gather(state.arg, model_axis, axis=1, tiled=True)
+
+        # --- per-island champion (each pod owns its islands' streams)
+        i = jnp.argmin(fitness_g, axis=1)  # [Il]
+        rows = jnp.arange(Il)
+        cand_fit, cand_op, cand_arg = (fitness_g[rows, i], op_g[rows, i],
+                                       arg_g[rows, i])
+        improved = cand_fit < state.best_fitness
+        best_op = jnp.where(improved[:, None], cand_op, state.best_op)
+        best_arg = jnp.where(improved[:, None], cand_arg, state.best_arg)
+        best_fit = jnp.minimum(cand_fit, state.best_fitness)
+
+        sel_fitness = fitness_g
+        if cfg.parsimony:
+            from repro.core.trees import tree_sizes
+
+            sizes = tree_sizes(op_g.reshape(Il * cfg.pop_size, N))
+            sel_fitness = fitness_g + cfg.parsimony * sizes.reshape(
+                Il, cfg.pop_size).astype(jnp.float32)
+
+        # --- offspring for this shard's slice (decorrelated per island
+        # via the per-island key, per rank via fold_in); per-island
+        # search parameters are the pod's slice of the global tables
+        rank = jax.lax.axis_index(model_axis)
+        start = (jax.lax.axis_index(pod) if pod else 0) * Il
+        probs_l = jax.lax.dynamic_slice_in_dim(jnp.asarray(probs_t), start, Il, 0)
+        tourn_l = jax.lax.dynamic_slice_in_dim(jnp.asarray(tourn_t), start, Il, 0)
+        pp_l = jax.lax.dynamic_slice_in_dim(jnp.asarray(pp_t), start, Il, 0)
+
+        breed = ev.make_island_breeder(cfg.tree_spec, tourn_max, elitism=0,
+                                       n_out=n_local, fold=rank)
+        keys, new_op, new_arg = jax.vmap(breed)(
+            state.key, op_g, arg_g, sel_fitness, probs_l, tourn_l, pp_l)
+        # elitism: rank 0's slice re-seeds each island's own champion
+        if cfg.elitism:
+            keep = rank == 0
+            new_op = new_op.at[:, 0].set(
+                jnp.where(keep, cand_op, new_op[:, 0]))
+            new_arg = new_arg.at[:, 0].set(
+                jnp.where(keep, cand_arg, new_arg[:, 0]))
+        if icfg.migrate_k and I > 1:
+            e_op, e_arg = isl.island_elites(op_g, arg_g, fitness_g,
+                                            icfg.migrate_k)
+            new_op, new_arg = isl.migrate_sharded(
+                icfg, new_op, new_arg, e_op, e_arg, state.generation,
+                cand_fit, pod, is_receiver=rank == n_model - 1)
+        return GPState(keys, new_op, new_arg, fitness_local, best_op, best_arg,
+                       best_fit, state.generation + 1)
+
+    return step, state_specs, data_spec, y_spec, w_spec
+
+
+def _pick_step_builder(cfg: GPConfig):
+    return (_sharded_island_step_builder if cfg.island.islands > 1
+            else _sharded_step_builder)
+
+
 def sharded_evolve_step(cfg: GPConfig, mesh, *, data_axis="data", model_axis="model",
                         pod_axis: str | None = None):
     """Build a shard_map'd generation step for `mesh`.
 
-    Shardings: X, y, weight on (data,); the population's leading axis on
-    (pod, model) — the pod slices are the islands, the model slices are
-    a pod's parallel evaluation shards. Returns (step_fn, specs dict)
-    ready for jit/lower; step_fn(state, X, y, weight) — weight is the
-    f32[D] dataset-padding mask (all-ones when nothing was padded).
-    best_* is replicated (global argmin over pods).
+    Shardings: X, y, weight on (data,). Classic layout (islands == 1):
+    the population's leading axis is on (pod, model) — the pod slices
+    are the islands, the model slices are a pod's parallel evaluation
+    shards — and best_* is replicated (global argmin over pods).
+    Island-batched layout (cfg.island.islands = I > 1): the state's
+    leading ISLAND axis is on (pod,), each island's population on
+    (model,), and best_* is per island ([I, ...], sharded over pod).
+    Returns (step_fn, specs dict) ready for jit/lower;
+    step_fn(state, X, y, weight) — weight is the f32[D] dataset-padding
+    mask (all-ones when nothing was padded).
     """
-    step, state_specs, data_spec, y_spec, w_spec = _sharded_step_builder(
+    step, state_specs, data_spec, y_spec, w_spec = _pick_step_builder(cfg)(
         cfg, mesh, data_axis=data_axis, model_axis=model_axis, pod_axis=pod_axis)
     smapped = compat.shard_map(
         step, mesh=mesh,
@@ -352,27 +665,41 @@ def sharded_evolve_block(cfg: GPConfig, mesh, *, n_steps: int, data_axis="data",
     The `lax.scan` lives INSIDE shard_map, so one dispatch runs `n_steps`
     generations — collectives included — with no host round-trip between
     them. Early stop follows the same branch-free freeze as the
-    single-device block (`best_fitness` is replicated, so every shard
-    takes the same freeze decision). Returns (block_fn, specs dict);
-    block_fn(state, X, y, weight, limit) -> (state, history f32[n_steps])
-    — `limit` is the replicated dynamic step budget (pass n_steps to run
-    the full block), history replicated (it streams the replicated
-    best_fitness).
+    single-device block; the classic layout's `best_fitness` is
+    replicated, the island layout reduces it (min over the pod's local
+    islands, `pmin` over the pod axis), so every shard takes the same
+    freeze decision either way. Returns (block_fn, specs dict);
+    block_fn(state, X, y, weight, limit) -> (state, history) — `limit`
+    is the replicated dynamic step budget (pass n_steps to run the full
+    block); history is f32[n_steps] replicated for the classic layout,
+    f32[n_steps, I] (one per-island best-fitness stream per column,
+    sharded over pod) for the island layout.
     """
-    step, state_specs, data_spec, y_spec, w_spec = _sharded_step_builder(
+    island = cfg.island.islands > 1
+    step, state_specs, data_spec, y_spec, w_spec = _pick_step_builder(cfg)(
         cfg, mesh, data_axis=data_axis, model_axis=model_axis, pod_axis=pod_axis)
+
+    def done(s, i, limit):
+        if not (island and cfg.stop_fitness is not None):
+            return _block_done(cfg, s, i, limit)
+        best = s.best_fitness.min()  # this pod's islands
+        if pod_axis:
+            best = jax.lax.pmin(best, pod_axis)  # every shard agrees
+        d = best <= cfg.stop_fitness
+        return d if limit is None else d | (i >= limit)
 
     def block(state: GPState, X, y, weight, limit):
         def body(s, i):
-            nxt = _freeze(_block_done(cfg, s, i, limit), s, step(s, X, y, weight))
+            nxt = _freeze(done(s, i, limit), s, step(s, X, y, weight))
             return nxt, nxt.best_fitness
 
         return jax.lax.scan(body, state, jnp.arange(n_steps))
 
+    hist_spec = P(None, pod_axis) if island else P()
     smapped = compat.shard_map(
         block, mesh=mesh,
         in_specs=(state_specs, data_spec, y_spec, w_spec, P()),
-        out_specs=(state_specs, P()),
+        out_specs=(state_specs, hist_spec),
     )
     return smapped, dict(state=state_specs, X=data_spec, y=y_spec, weight=w_spec,
-                         limit=P(), history=P())
+                         limit=P(), history=hist_spec)

@@ -121,10 +121,19 @@ def mutate_point(key, op, arg, spec: TreeSpec, p: float = 0.25):
     return new_op, new_arg
 
 
-def tournament(key, fitness, pop: int, size: int):
-    """Minimizing tournament selection → int32[pop] winner indices."""
+def tournament(key, fitness, pop: int, size: int, active=None):
+    """Minimizing tournament selection → int32[pop] winner indices.
+
+    `size` is the static candidate-draw count; `active` (optional traced
+    int32 scalar ≤ size) masks the tail candidates out of the argmin, so
+    one compiled program serves per-island tournament sizes (the island
+    engine passes size = max over islands and active = this island's).
+    With active=None the draw and the argmin are the classic fixed-size
+    tournament, bit for bit."""
     idx = jax.random.randint(key, (pop, size), 0, fitness.shape[0])
     scores = fitness[idx]
+    if active is not None:
+        scores = jnp.where(jnp.arange(size) < active, scores, jnp.inf)
     return idx[jnp.arange(pop), jnp.argmin(scores, axis=-1)].astype(jnp.int32)
 
 
@@ -140,6 +149,84 @@ class OperatorMix:
 
     def __hash__(self):
         return hash((self.reproduce, self.mutate_point, self.mutate_branch, self.crossover))
+
+    def probs(self) -> np.ndarray:
+        """f32[4] probability vector in `next_generation_arrays` order."""
+        return np.asarray([self.reproduce, self.mutate_point,
+                           self.mutate_branch, self.crossover], np.float32)
+
+
+def next_generation_arrays(key, op, arg, fitness, spec: TreeSpec, probs,
+                           tourn_size: int = 10, elitism: int = 1,
+                           n_out: int | None = None, tourn_active=None,
+                           point_rate=None):
+    """`next_generation` with the operator mix as *traced arrays* — the
+    vectorized surface the island engine vmaps over the island axis so
+    one compiled program runs I different search regimes.
+
+    probs:        f32[4] operator probabilities in (reproduce,
+                  mutate_point, mutate_branch, crossover) order —
+                  `OperatorMix.probs()` per island.
+    tourn_size:   static candidate-draw count (max over islands).
+    tourn_active: optional traced int32 — this island's effective
+                  tournament size (≤ tourn_size; None = tourn_size).
+    point_rate:   optional traced f32 — this island's point-mutation
+                  redraw probability (None = the 0.25 default).
+
+    With probs built from an OperatorMix and the optional args left None
+    this is bit-for-bit the classic static path (`next_generation` is a
+    thin jitted wrapper over it). Plain traced function: call it inside
+    your own jit/vmap."""
+    P = n_out or op.shape[0]
+    k_op, k_t1, k_t2, k_x, k_mb, k_mp = jax.random.split(key, 6)
+
+    choice = jax.random.categorical(k_op, jnp.log(probs), shape=(P,))
+
+    parent_a = tournament(k_t1, fitness, P, tourn_size, tourn_active)
+    parent_b = tournament(k_t2, fitness, P, tourn_size, tourn_active)
+    op_a, arg_a = op[parent_a], arg[parent_a]
+    op_b, arg_b = op[parent_b], arg[parent_b]
+
+    op_x, arg_x = crossover(k_x, op_a, arg_a, op_b, arg_b, spec)
+    op_mb, arg_mb = mutate_branch(k_mb, op_a, arg_a, spec)
+    if point_rate is None:
+        op_mp, arg_mp = mutate_point(k_mp, op_a, arg_a, spec)
+    else:
+        op_mp, arg_mp = mutate_point(k_mp, op_a, arg_a, spec, p=point_rate)
+
+    c = choice[:, None]
+    new_op = jnp.where(c == 0, op_a, jnp.where(c == 1, op_mp, jnp.where(c == 2, op_mb, op_x)))
+    new_arg = jnp.where(c == 0, arg_a, jnp.where(c == 1, arg_mp, jnp.where(c == 2, arg_mb, arg_x)))
+
+    if elitism:
+        best = jnp.argsort(fitness)[:elitism]
+        new_op = new_op.at[:elitism].set(op[best])
+        new_arg = new_arg.at[:elitism].set(arg[best])
+    return new_op, new_arg
+
+
+def make_island_breeder(spec: TreeSpec, tourn_size: int, elitism: int,
+                        n_out: int | None = None, fold=None):
+    """The ONE per-island breeding closure every island path vmaps over
+    its island axis — single-device engine, mesh shards (which pass
+    their model-rank as `fold` so each rank breeds a decorrelated slice)
+    and the host backend's cached program all share it, so the
+    heterogeneous-search contract cannot drift between paths.
+
+    Returns breed(key, op_i, arg_i, fitness_i, probs_i, tourn_active_i,
+    point_rate_i) -> (advanced key, new_op, new_arg); `fold` (optional
+    traced int) is folded into the draw key after the split."""
+
+    def breed(key, op_i, arg_i, fit_i, probs_i, tourn_i, pp_i):
+        key, k_next = jax.random.split(key)
+        if fold is not None:
+            k_next = jax.random.fold_in(k_next, fold)
+        new_op, new_arg = next_generation_arrays(
+            k_next, op_i, arg_i, fit_i, spec, probs_i, tourn_size, elitism,
+            n_out, tourn_active=tourn_i, point_rate=pp_i)
+        return key, new_op, new_arg
+
+    return breed
 
 
 @partial(jax.jit, static_argnames=("spec", "mix", "tourn_size", "elitism", "n_out"))
@@ -158,29 +245,9 @@ def next_generation(key, op, arg, fitness, spec: TreeSpec, mix: OperatorMix = Op
     caller's trace. Host loops calling it repeatedly should go through
     `repro.gp.backends.host_next_generation(spec, mix, tourn_size,
     elitism)` instead — one cached compiled program per operator
-    configuration, shared across call sites and sessions.
+    configuration, shared across call sites and sessions. Heterogeneous
+    per-island operator parameters go through `next_generation_arrays`.
     """
-    P = n_out or op.shape[0]
-    k_op, k_t1, k_t2, k_x, k_mb, k_mp = jax.random.split(key, 6)
-
     probs = jnp.array([mix.reproduce, mix.mutate_point, mix.mutate_branch, mix.crossover])
-    choice = jax.random.categorical(k_op, jnp.log(probs), shape=(P,))
-
-    parent_a = tournament(k_t1, fitness, P, tourn_size)
-    parent_b = tournament(k_t2, fitness, P, tourn_size)
-    op_a, arg_a = op[parent_a], arg[parent_a]
-    op_b, arg_b = op[parent_b], arg[parent_b]
-
-    op_x, arg_x = crossover(k_x, op_a, arg_a, op_b, arg_b, spec)
-    op_mb, arg_mb = mutate_branch(k_mb, op_a, arg_a, spec)
-    op_mp, arg_mp = mutate_point(k_mp, op_a, arg_a, spec)
-
-    c = choice[:, None]
-    new_op = jnp.where(c == 0, op_a, jnp.where(c == 1, op_mp, jnp.where(c == 2, op_mb, op_x)))
-    new_arg = jnp.where(c == 0, arg_a, jnp.where(c == 1, arg_mp, jnp.where(c == 2, arg_mb, arg_x)))
-
-    if elitism:
-        best = jnp.argsort(fitness)[:elitism]
-        new_op = new_op.at[:elitism].set(op[best])
-        new_arg = new_arg.at[:elitism].set(arg[best])
-    return new_op, new_arg
+    return next_generation_arrays(key, op, arg, fitness, spec, probs,
+                                  tourn_size, elitism, n_out)

@@ -13,12 +13,26 @@ statistics like Pearson correlation that need global moments — works on
 any data tiling and any device mesh:
 
   phase 1  `moments(preds, y, weight, spec)` returns weighted sufficient
-           moments f32[P, M] over one data tile/shard. Moments are plain
-           weighted sums over data points, so partial moments from
-           different tiles are SUMMED (jnp tiling, Pallas grid
-           accumulation, mesh `psum` on the data axis).
-  phase 2  `reduce_moments(moments, spec)` turns the fully-summed
+           moments f32[P, M] over one data tile/shard. Partial moments
+           from different tiles/shards are MERGED — by elementwise sum
+           by default, or by the kernel's own associative
+           `combine_moments` (jnp tiling, Pallas grid accumulation, the
+           mesh data-axis reduction).
+  phase 2  `reduce_moments(moments, spec)` turns the fully-merged
            f32[..., M] moments into the final f32[...] fitness.
+
+Two refinements ride on the protocol (both optional per kernel):
+
+  * `combine_moments` lets a kernel carry *shard-locally centered*
+    moments (mean / M2 / co-moment) merged pairwise with Chan's
+    parallel-variance formulas instead of raw power sums — `pearson`
+    and `r2` do, which removes the classic E[x²]−E[x]² f32
+    catastrophic cancellation on |mean| ≫ std targets from every
+    tiled and sharded path.
+  * `y_moment_idx` marks the moment columns that depend only on
+    (y, weight) — identical for every tree — so reductions can carry
+    them ONCE per shard instead of per tree (for `pearson` that is
+    3 of 7 columns: ~half the mesh reduction bytes).
 
 Sum-decomposable objectives (abs-error, MSE, hit counts) are the trivial
 M=1 case: their single "moment" *is* the fitness partial and phase 2 is a
@@ -75,9 +89,24 @@ class FitnessKernel:
       moments:         (preds f32[P, D], y f32[D], weight f32[D], spec)
                        -> f32[P, M] weighted moment partials for one data
                        tile/shard; partials from different tiles/shards
-                       are summed element-wise before phase 2.
+                       are merged (elementwise sum, or `combine_moments`
+                       when the kernel defines one) before phase 2.
       reduce_moments:  (moments f32[..., M], spec) -> f32[...] final
-                       fitness (minimize) from fully-summed moments.
+                       fitness (minimize) from fully-merged moments.
+      combine_moments: optional (m1 f32[..., M], m2 f32[..., M], spec)
+                       -> f32[..., M] associative pairwise merge of two
+                       partials. None = elementwise sum. The all-zeros
+                       vector must be a merge identity (it seeds scan
+                       accumulators). Lets kernels carry shard-locally
+                       centered moments (Chan's parallel combine).
+      y_moments:       optional (y f32[D], weight f32[D], spec) ->
+                       f32[len(y_moment_idx)] — just the tree-independent
+                       columns of the moment vector, for reductions that
+                       hoist them out of the per-tree payload.
+      y_moment_idx:    positions (tuple of ints) of the moment columns
+                       that depend only on (y, weight) — every tree row
+                       carries the identical value there, so sharded
+                       reductions move them once, not P times.
       partial_fitness: (preds f32[P, D], y f32[D], weight f32[D], spec)
                        -> f32[P]. For `decomposable` kernels this is the
                        M=1 moment (summable across tiles); otherwise it
@@ -105,6 +134,22 @@ class FitnessKernel:
     moments: Callable = None  # phase 1: (preds, y, w, spec) -> f32[P, M]
     reduce_moments: Callable = None  # phase 2: (f32[..., M], spec) -> f32[...]
     n_moments: int = 1  # M — static so kernel output shapes are static
+    combine_moments: Callable = None  # pairwise merge; None = elementwise sum
+    y_moments: Callable = None  # (y, w, spec) -> f32[My] tree-independent cols
+    y_moment_idx: tuple = ()  # positions of those columns in the M vector
+
+    def merge_moments(self, m1, m2, spec):
+        """Merge two moment partials — the ONE way any path (scan tile,
+        Pallas grid, mesh shard fold) accumulates phase-1 output."""
+        if self.combine_moments is None:
+            return m1 + m2
+        return self.combine_moments(m1, m2, spec)
+
+    @property
+    def tree_moment_idx(self) -> tuple:
+        """Complement of `y_moment_idx`: the per-tree moment columns."""
+        return tuple(i for i in range(self.n_moments)
+                     if i not in self.y_moment_idx)
 
 
 _REGISTRY: dict[str, FitnessKernel] = {}
@@ -119,6 +164,14 @@ def _normalize(kernel: FitnessKernel) -> FitnessKernel:
                                             (no moment pass; mesh paths
                                             reject it with a clear error)
     """
+    if bool(kernel.y_moment_idx) != (kernel.y_moments is not None):
+        raise ValueError(f"fitness kernel {kernel.name!r} must define "
+                         f"y_moments and y_moment_idx together")
+    if kernel.y_moment_idx and not all(
+            0 <= i < kernel.n_moments for i in kernel.y_moment_idx):
+        raise ValueError(f"fitness kernel {kernel.name!r} y_moment_idx "
+                         f"{kernel.y_moment_idx} out of range for "
+                         f"n_moments={kernel.n_moments}")
     if kernel.moments is not None:
         if kernel.reduce_moments is None:
             raise ValueError(f"fitness kernel {kernel.name!r} defines moments "
@@ -222,21 +275,29 @@ def _mse_partial(preds, y, w, spec):
 
 
 # Pearson (1 - r² against the target) needs global moments, so it is the
-# canonical two-pass kernel: phase 1 collects the six weighted moments of
-# the classic product-moment formula plus the invalid count; phase 2 forms
-# means/variances/covariance from the summed moments. `xw = x * w` is
-# computed FIRST so zero-weight points contribute exact 0.0 even when the
+# canonical two-pass kernel. Phase 1 collects SHARD-LOCALLY CENTERED
+# moments — count, means, centered second moments (M2) and co-moment —
+# and `combine_moments` merges partials with Chan's parallel-variance
+# formulas, so no path ever forms the raw E[x²]−E[x]² difference that
+# cancels catastrophically in f32 when |mean| ≫ std (unnormalized
+# targets). `xw = x * w` is computed FIRST wherever a prediction enters
+# a product so zero-weight points contribute exact 0.0 even when the
 # prediction saturated to ±3.4e38 (w * x² would overflow to inf·0 = NaN).
 #
 # pearson and r2 ALSO register an explicit `partial_fitness`: the
 # mean-centered single-pass form, exact in f32, used whenever the whole
 # dataset is in hand (fitness_from_preds, the un-tiled reference path,
-# metric). The raw-moment form E[x²]-E[x]² cancels catastrophically when
-# |mean| >> std (unnormalized targets), so the tiled/mesh paths trade
-# some resolution for shardability — standardize such targets, or see
-# the ROADMAP note on a Welford-style merge.
+# metric). The centered-moment form is within a few ulps of it on every
+# tiled/sharded path — the old raw-moment caveat is gone.
+#
+# The y-only columns (count, ȳ, M2y) are computed ONCE per shard and
+# broadcast across the population: `y_moment_idx` marks them so sharded
+# reductions move them once instead of per tree (~half the reduction
+# bytes for pearson), and the moment pass itself skips the per-tree
+# recomputation (~1/num_nodes of eval FLOPs).
 
-_PEARSON_MOMENTS = 7  # Σw, Σwx, Σwy, Σwx², Σwy², Σwxy, invalid-count
+_PEARSON_MOMENTS = 7  # n=Σw, x̄, ȳ, M2x, M2y, Cxy, invalid-count
+_PEARSON_Y_IDX = (0, 2, 4)  # n, ȳ, M2y — tree-independent
 
 
 def _pearson_partial(preds, y, w, spec):
@@ -257,37 +318,80 @@ def _pearson_partial(preds, y, w, spec):
     return jnp.where(jnp.isnan(out), jnp.inf, out)
 
 
+def _y_center_moments(y, w, spec):
+    """f32[3] tree-independent centered target moments: [Σw, ȳ, M2y]."""
+    n = w.sum()
+    my = (y * w).sum() / jnp.maximum(n, 1.0)
+    dy = y - my
+    m2y = (dy * w * dy).sum()
+    return jnp.stack([n, my, m2y])
+
+
 def _pearson_moments(preds, y, w, spec):
+    nym = _y_center_moments(y, w, spec)
+    n, my = nym[0], nym[1]
+    nz = jnp.maximum(n, 1.0)
     w_ = jnp.broadcast_to(w[None, :], preds.shape)
-    yb = jnp.broadcast_to(y[None, :], preds.shape)
     x0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
-    xw = x0 * w_
-    yw = yb * w_
+    mx = (x0 * w_).sum(-1) / nz  # [P]
+    dx = x0 - mx[..., None]
+    dxw = dx * w_  # weight-first: padded ±3.4e38 preds contribute exact 0
+    m2x = (dxw * dx).sum(-1)
+    cxy = (dxw * (y - my)[None, :]).sum(-1)
+    P = preds.shape[:-1]
     return jnp.stack([
-        w_.sum(-1), xw.sum(-1), yw.sum(-1),
-        (xw * x0).sum(-1), (yw * yb).sum(-1), (xw * yb).sum(-1),
+        jnp.broadcast_to(n, P), mx, jnp.broadcast_to(my, P),
+        m2x, jnp.broadcast_to(nym[2], P), cxy,
         _nonfinite_count(preds, w_),
     ], axis=-1)
 
 
-# Below this relative level a raw-moment "variance" E[x²]-E[x]² is pure
-# f32 cancellation noise of the subtraction; cov²/noise would then crown
-# CONSTANT-prediction trees — which every GP population contains — as
-# perfect (r²=1, fitness 0). Treat it as zero correlation instead: 256
-# ulps covers the ~√D·eps accumulation error of realistic shard sums
-# with a wide margin, while genuine signals sit orders above it.
+def _chan_merge(n1, mean1, m2_1, n2, mean2, m2_2):
+    """Chan's parallel combine of (count, mean, centered M2) pairs.
+    Zero-count partials are exact identities (δ·n2/n selects the other
+    side's mean; the M2 cross term vanishes)."""
+    n = n1 + n2
+    nz = jnp.maximum(n, 1.0)
+    delta = mean2 - mean1
+    mean = mean1 + delta * n2 / nz
+    m2 = m2_1 + m2_2 + delta * delta * n1 * n2 / nz
+    return n, mean, m2, delta, nz
+
+
+def _pearson_combine(m1, m2, spec):
+    n1, n2 = m1[..., 0], m2[..., 0]
+    n, mx, m2x, dx, nz = _chan_merge(n1, m1[..., 1], m1[..., 3],
+                                     n2, m2[..., 1], m2[..., 3])
+    _, my, m2y, dy, _ = _chan_merge(n1, m1[..., 2], m1[..., 4],
+                                    n2, m2[..., 2], m2[..., 4])
+    cxy = m1[..., 5] + m2[..., 5] + dx * dy * n1 * n2 / nz
+    return jnp.stack([n, mx, my, m2x, m2y, cxy, m1[..., 6] + m2[..., 6]],
+                     axis=-1)
+
+
+# Below this level a variance is indistinguishable from the f32 noise of
+# the Chan merge itself: each pairwise combine subtracts two shard means
+# (rounding ~eps·|mean| each), so spurious variance accumulates at the
+# (eps·mean)² scale. cov²/noise would then crown CONSTANT-prediction
+# trees — which every GP population contains — as perfect (r²=1,
+# fitness 0); treat anything below (256·eps·|mean|)² as zero correlation
+# instead. 256 ulps leaves ~4 orders of magnitude of margin over the
+# single-merge noise on each side; the resolution limit it implies is
+# std/|mean| ≳ 3e-5 — ~8x finer than the old raw-moment form's
+# cancellation point, and irrelevant for standardized targets.
 _VAR_NOISE_FLOOR = 256 * 1.1920929e-07  # 256 * f32 machine epsilon
 
 
 def _pearson_reduce(m, spec):
     n = jnp.maximum(m[..., 0], 1.0)
-    mx, my = m[..., 1] / n, m[..., 2] / n
-    ex2, ey2 = m[..., 3] / n, m[..., 4] / n
-    # cancellation can push a zero variance epsilon-negative: clamp at 0
-    var_x = jnp.maximum(ex2 - mx * mx, 0.0)
-    var_y = jnp.maximum(ey2 - my * my, 0.0)
-    cov = m[..., 5] / n - mx * my
-    ok = (var_x > _VAR_NOISE_FLOOR * ex2) & (var_y > _VAR_NOISE_FLOOR * ey2)
+    mx, my = m[..., 1], m[..., 2]
+    # centered M2 never cancels, but clamp defensively at 0
+    var_x = jnp.maximum(m[..., 3], 0.0) / n
+    var_y = jnp.maximum(m[..., 4], 0.0) / n
+    cov = m[..., 5] / n
+    ok = ((var_x > jnp.square(_VAR_NOISE_FLOOR * mx))
+          & (var_y > jnp.square(_VAR_NOISE_FLOOR * my))
+          & (var_x > 0.0) & (var_y > 0.0))
     r2 = jnp.where(ok, jnp.clip(jnp.square(cov)
                                 / jnp.maximum(var_x * var_y, 1e-12), 0.0, 1.0), 0.0)
     out = jnp.where(m[..., 6] > 0, jnp.inf, 1.0 - r2)
@@ -296,10 +400,12 @@ def _pearson_reduce(m, spec):
 
 # Coefficient-of-determination kernel: fitness = 1 - R² = SSres/SStot
 # (minimize; 0 = perfect fit). SSres is directly summable; SStot needs the
-# global target mean — registered purely through the two-pass protocol to
-# prove the extension point (docs/fitness-kernels.md walks through it).
+# global target mean — carried as centered (n, ȳ, M2y) with the Chan
+# combine, like pearson. Registered purely through the two-pass protocol
+# to prove the extension point (docs/fitness-kernels.md walks through it).
 
-_R2_MOMENTS = 5  # Σw, Σwy, Σwy², Σw(pred-y)², invalid-count
+_R2_MOMENTS = 5  # n=Σw, ȳ, M2y, Σw(pred-y)², invalid-count
+_R2_Y_IDX = (0, 1, 2)  # n, ȳ, M2y — tree-independent
 
 
 def _r2_partial(preds, y, w, spec):
@@ -316,20 +422,28 @@ def _r2_partial(preds, y, w, spec):
 
 
 def _r2_moments(preds, y, w, spec):
+    nym = _y_center_moments(y, w, spec)
     w_ = jnp.broadcast_to(w[None, :], preds.shape)
     yb = jnp.broadcast_to(y[None, :], preds.shape)
     x0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
-    yw = yb * w_
     err = (x0 - yb) * w_  # weight BEFORE squaring (see pearson note)
+    P = preds.shape[:-1]
     return jnp.stack([
-        w_.sum(-1), yw.sum(-1), (yw * yb).sum(-1), (err * (x0 - yb)).sum(-1),
+        jnp.broadcast_to(nym[0], P), jnp.broadcast_to(nym[1], P),
+        jnp.broadcast_to(nym[2], P), (err * (x0 - yb)).sum(-1),
         _nonfinite_count(preds, w_),
     ], axis=-1)
 
 
+def _r2_combine(m1, m2, spec):
+    n, my, m2y, _, _ = _chan_merge(m1[..., 0], m1[..., 1], m1[..., 2],
+                                   m2[..., 0], m2[..., 1], m2[..., 2])
+    return jnp.stack([n, my, m2y, m1[..., 3] + m2[..., 3],
+                      m1[..., 4] + m2[..., 4]], axis=-1)
+
+
 def _r2_reduce(m, spec):
-    n = jnp.maximum(m[..., 0], 1.0)
-    ss_tot = jnp.maximum(m[..., 2] - jnp.square(m[..., 1]) / n, 1e-12)
+    ss_tot = jnp.maximum(m[..., 2], 1e-12)
     out = jnp.where(m[..., 4] > 0, jnp.inf, m[..., 3] / ss_tot)
     return jnp.where(jnp.isnan(out), jnp.inf, out)  # NaN must never win
 
@@ -356,12 +470,16 @@ register_kernel(FitnessKernel(
     name="pearson", n_moments=_PEARSON_MOMENTS,
     partial_fitness=_pearson_partial,
     moments=_pearson_moments, reduce_moments=_pearson_reduce,
+    combine_moments=_pearson_combine,
+    y_moments=_y_center_moments, y_moment_idx=_PEARSON_Y_IDX,
     metric=lambda preds, y, spec: _pearson_partial(
         preds, y, jnp.ones_like(y, jnp.float32), spec)))
 register_kernel(FitnessKernel(
     name="r2", aliases=("r-squared",), n_moments=_R2_MOMENTS,
     partial_fitness=_r2_partial,
     moments=_r2_moments, reduce_moments=_r2_reduce,
+    combine_moments=_r2_combine,
+    y_moments=_y_center_moments, y_moment_idx=_R2_Y_IDX,
     metric=lambda preds, y, spec: 1.0 - _r2_partial(
         preds, y, jnp.ones_like(y, jnp.float32), spec)))
 
@@ -380,8 +498,9 @@ def fitness_from_preds(preds, y, spec: FitnessSpec, weight=None):
 
 def moments_from_preds(preds, y, spec: FitnessSpec, weight=None):
     """Phase 1 only: f32[P, M] weighted moment partials of preds[P, D]
-    against y[D]. Sum the [P, M] partials from every tile/shard, then
-    finish with `get_kernel(spec.kernel).reduce_moments`."""
+    against y[D]. Merge the [P, M] partials from every tile/shard with
+    `kern.merge_moments` (elementwise sum unless the kernel defines a
+    `combine_moments`), then finish with `kern.reduce_moments`."""
     kern = get_kernel(spec.kernel)
     if kern.moments is None:
         raise ValueError(f"fitness kernel {kern.name!r} defines no moment pass; "
@@ -389,6 +508,27 @@ def moments_from_preds(preds, y, spec: FitnessSpec, weight=None):
     y = y.astype(jnp.float32)
     w = jnp.ones_like(y) if weight is None else weight.astype(jnp.float32)
     return kern.moments(preds, y, w, spec)
+
+
+def fold_moment_partials(kern: FitnessKernel, parts, spec: FitnessSpec):
+    """Merge a sequence of f32[..., M] moment partials (one per
+    tile/shard) into one, via the kernel's associative merge."""
+    total = parts[0]
+    for p in parts[1:]:
+        total = kern.merge_moments(total, p, spec)
+    return total
+
+
+def scatter_tree_y(kern: FitnessKernel, tree_m, y_m):
+    """Reassemble a full f32[..., M] moment vector from the per-tree
+    columns `tree_m` f32[..., Mt] and the hoisted tree-independent
+    columns `y_m` f32[My] (broadcast across the leading axes) — the
+    inverse of slicing by `tree_moment_idx` / `y_moment_idx`."""
+    shape = (*tree_m.shape[:-1], kern.n_moments)
+    out = jnp.zeros(shape, tree_m.dtype)
+    out = out.at[..., jnp.asarray(kern.tree_moment_idx)].set(tree_m)
+    return out.at[..., jnp.asarray(kern.y_moment_idx)].set(
+        jnp.broadcast_to(y_m, (*tree_m.shape[:-1], len(kern.y_moment_idx))))
 
 
 def accuracy_from_preds(preds, y, spec: FitnessSpec):

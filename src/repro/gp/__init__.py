@@ -7,6 +7,8 @@ registries that make the spectrum pluggable (`backends`, fitness kernels
 in `repro.core.fitness`) and sklearn-style facades.
 """
 from repro.core.engine import GPConfig, GPState  # noqa: F401
+from repro.core.evolve import OperatorMix  # noqa: F401
+from repro.core.islands import IslandConfig  # noqa: F401
 from repro.core.fitness import (  # noqa: F401
     FitnessKernel, FitnessSpec, available_kernels, get_kernel, register_kernel,
 )

@@ -188,6 +188,32 @@ def host_next_generation(tree_spec, mix, tourn_size: int, elitism: int):
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=64)
+def host_next_generation_islands(tree_spec, island_cfg, mix, tourn_size: int,
+                                 elitism: int):
+    """Island-batched sibling of `host_next_generation`: ONE jitted
+    program per (spec, island config, mix, tourn_size, elitism) that
+    vmaps `next_generation_arrays` over the island axis with each
+    island's operator parameters — the scalar backend's host loop runs
+    the same heterogeneous-search semantics as the jitted engine paths.
+    fn(keys [I,2], op [I,P,N], arg, fitness [I,P]) -> (keys, op, arg)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import evolve as ev
+
+    probs = island_cfg.prob_table(mix)
+    tourn_max, tourn = island_cfg.tourn_table(tourn_size)
+    p_point = island_cfg.point_rate_table()
+    breed = ev.make_island_breeder(tree_spec, tourn_max, elitism)
+
+    def fn(keys, op, arg, fitness):
+        return jax.vmap(breed)(keys, op, arg, fitness, jnp.asarray(probs),
+                               jnp.asarray(tourn), jnp.asarray(p_point))
+
+    return jax.jit(fn)
+
+
 register_backend(EvalBackend(
     name="jnp", evaluate=_jnp_evaluate, fitness=_jnp_fitness,
     moments=_jnp_moments,

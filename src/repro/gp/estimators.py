@@ -22,7 +22,9 @@ class _SymbolicBase:
                  stop_fitness: float | None = None, backend: str | None = None,
                  topology=None, checkpoint_dir: str | None = None,
                  random_state: int = 0, warm_start: bool = False,
-                 block_size: int | None = None):
+                 block_size: int | None = None, islands: int = 1,
+                 migrate_every: int = 10, migrate_k: int = 4,
+                 island_topology: str = "ring", island_mixes=None):
         self.pop_size = pop_size
         self.generations = generations
         self.max_depth = max_depth
@@ -40,6 +42,14 @@ class _SymbolicBase:
         # generations per device-resident evolution block (None = whole run
         # in one dispatch, bounded by the checkpoint period when set)
         self.block_size = block_size
+        # island-model layout: islands of pop_size trees each, periodic
+        # elite migration, optional per-island operator mixes — see
+        # docs/islands.md
+        self.islands = islands
+        self.migrate_every = migrate_every
+        self.migrate_k = migrate_k
+        self.island_topology = island_topology
+        self.island_mixes = island_mixes
 
     def _kernel_overrides(self) -> dict:
         return {"kernel": self._kernel}
@@ -51,7 +61,12 @@ class _SymbolicBase:
                          max_depth=self.max_depth, n_consts=self.n_consts,
                          tourn_size=self.tourn_size, elitism=self.elitism,
                          parsimony=self.parsimony, stop_fitness=self.stop_fitness,
+                         islands=self.islands, migrate_every=self.migrate_every,
+                         migrate_k=self.migrate_k,
+                         island_topology=self.island_topology,
                          **self._kernel_overrides())
+        if self.island_mixes is not None:
+            overrides["island_mixes"] = tuple(self.island_mixes)
         if self.fn_set is not None:
             overrides["fn_set"] = self.fn_set
         self._key = jax.random.PRNGKey(self.random_state)

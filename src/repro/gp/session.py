@@ -15,6 +15,12 @@ magnitude of dataset size; the session makes that a one-line switch:
     # mesh/island run — PartitionSpec plumbing stays internal
     GPSession(topology=MeshTopology(data=2, model=2, pod=2)).fit(X_rows, y)
 
+    # island-model run: 4 islands of 200 trees on ANY of the above —
+    # one CPU device, a flat mesh, or pods × in-device islands; the
+    # same fit() call, per-island best-fitness streams in
+    # session.island_history
+    GPSession(pop_size=200, islands=4, migrate_every=5).fit(X_rows, y)
+
 The session owns the full lifecycle: data ingestion (`data/loader`
 transposition + padding + device placement), state init/seeding
 (`core.parse`), the generation loop, early stopping, periodic
@@ -65,8 +71,13 @@ class MeshTopology:
     model  shards the population (op/arg int32[P, N] split on P);
            selection all_gathers the pod's fitness + parent pool (tiny
            next to evaluation).
-    pod    runs independent island populations with periodic elite
-           migration (`migrate_every`/`migrate_k` in GPConfig).
+    pod    island parallelism. Classic layout (islands=1): each pod
+           slice evolves an independent sub-population with periodic
+           elite ring migration. Island-batched layout (islands=I > 1):
+           the pod axis shards the ISLAND axis — I/n_pods in-device
+           islands per pod, migration composed across both levels
+           (`core/islands.py`); `migrate_every`/`migrate_k`/
+           `island_topology` configure it.
 
     Purely declarative — `build()` materializes the jax Mesh; GPSession
     calls it lazily and keeps all PartitionSpec plumbing internal."""
@@ -84,15 +95,26 @@ class MeshTopology:
 
 _TREE_KEYS = ("max_depth", "n_features", "n_consts", "fn_set", "p_const", "grow_p_fn")
 _FIT_KEYS = ("kernel", "n_classes", "precision")
+# flat spellings of IslandConfig fields (migrate_every/migrate_k ride the
+# GPConfig legacy aliases); "islands" is the headline front-door knob
+_ISLAND_KEYS = {"islands": "islands", "island_topology": "topology",
+                "island_mixes": "mixes", "island_tourn_sizes": "tourn_sizes",
+                "island_point_rates": "point_rates"}
 
 
 def make_config(config: GPConfig | None = None, **overrides) -> GPConfig:
-    """GPConfig from flat keyword overrides — tree/fitness sub-spec keys
-    (max_depth, kernel, ...) land on the right nested dataclass, so callers
-    never hand-assemble TreeSpec/FitnessSpec for common runs."""
+    """GPConfig from flat keyword overrides — tree/fitness/island sub-spec
+    keys (max_depth, kernel, islands, island_topology, ...) land on the
+    right nested dataclass, so callers never hand-assemble
+    TreeSpec/FitnessSpec/IslandConfig for common runs."""
     config = config if config is not None else GPConfig()
     tree_kw = {k: overrides.pop(k) for k in _TREE_KEYS if k in overrides}
     fit_kw = {k: overrides.pop(k) for k in _FIT_KEYS if k in overrides}
+    island_kw = {v: overrides.pop(k) for k, v in _ISLAND_KEYS.items()
+                 if k in overrides}
+    if island_kw:
+        config = dataclasses.replace(
+            config, island=dataclasses.replace(config.island, **island_kw))
     fn_set = tree_kw.get("fn_set")
     if isinstance(fn_set, str):
         tree_kw["fn_set"] = prim.FunctionSet.make(tuple(fn_set.split(",")))
@@ -120,7 +142,17 @@ class GPSession:
     `history` (floats, one per generation run) and `stats`
     ('host_syncs'/'blocks' counters) are host-side and free to read.
     Keyword overrides (pop_size=, kernel=, max_depth=, ...) land on the
-    right nested GPConfig dataclass via `make_config`."""
+    right nested GPConfig dataclass via `make_config`.
+
+    `islands=I` (plus `migrate_every=`, `migrate_k=`, `island_topology=`,
+    `island_mixes=`, `island_tourn_sizes=`, `island_point_rates=`) turns
+    the run into I islands of `pop_size` trees on whatever backend and
+    topology the session already uses — every GPState population leaf
+    grows a leading island axis, `island_history` streams each island's
+    best fitness per generation, `best_expression()`/`predict()` decode
+    the best across all islands, and `island_expressions()` lists every
+    island's champion. With a pod-axis mesh the islands spread over pods
+    (islands % pod == 0); `islands=1` is bitwise the classic layout."""
 
     def __init__(self, config: GPConfig | None = None, *, backend: str | None = None,
                  topology: "MeshTopology | object | None" = None,
@@ -151,6 +183,9 @@ class GPSession:
         self._gen_dirty = False  # mirror stale (raw evolve_block + stop_fitness)
         self.state: GPState | None = None
         self.history: list[float] = []
+        # island runs: one f32[I] row per generation (per-island best-
+        # fitness streams); stays empty for the classic layout
+        self.island_history: list[np.ndarray] = []
         self.stats = {"host_syncs": 0, "blocks": 0}
         self.feature_names = list(feature_names) if feature_names else None
         self._callback = callback
@@ -180,8 +215,24 @@ class GPSession:
         return int(self.state.generation) if self.state is not None else 0
 
     @property
+    def islands(self) -> int:
+        """Number of islands in the population layout (1 = classic)."""
+        return self._cfg.island.islands
+
+    @property
     def best_fitness(self) -> float:
-        return float(self.state.best_fitness) if self.state is not None else float("inf")
+        """Best fitness seen so far — across ALL islands for an
+        island-batched run (one host sync)."""
+        if self.state is None:
+            return float("inf")
+        bf = np.asarray(self.state.best_fitness)
+        return float(bf.min()) if bf.ndim else float(bf)
+
+    @property
+    def island_best_fitness(self) -> np.ndarray:
+        """f32[I] per-island champion fitness (one host sync)."""
+        self._require_state()
+        return np.atleast_1d(np.asarray(self.state.best_fitness))
 
     @property
     def n_rows(self) -> int:
@@ -290,6 +341,7 @@ class GPSession:
         self.state = engine.init_state(self._cfg, key, seeds=seeds,
                                        feature_names=self.feature_names)
         self.history = []
+        self.island_history = []
         self._gen_host = 0
         self._gen_dirty = False
         if self._manager is not None:
@@ -363,8 +415,14 @@ class GPSession:
         contract as engine.evolve_step, with evaluation on the host. The
         selection/variation program is jitted ONCE per (spec, mix,
         tourn_size, elitism) and cached across call sites and sessions
-        (backends.host_next_generation)."""
+        (backends.host_next_generation). Island-batched state loops the
+        host evaluator over islands, breeds each with its own operator
+        parameters, and applies the in-device migration lowering — the
+        scalar baseline runs the same island semantics as the jitted
+        paths (per-generation host sync, as ever)."""
         cfg = self._cfg
+        if cfg.island.islands > 1:
+            return self._host_step_islands(state)
         fitness = np.asarray(self._backend.fitness(
             np.asarray(state.op), np.asarray(state.arg), self._X, self._y,
             np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
@@ -383,6 +441,49 @@ class GPSession:
         new_op, new_arg = next_gen(k_next, state.op, state.arg, jnp.asarray(sel))
         return GPState(key, new_op, new_arg, jnp.asarray(fitness), best_op, best_arg,
                        jnp.asarray(best_fit, jnp.float32), state.generation + 1)
+
+    def _host_step_islands(self, state: GPState) -> GPState:
+        """Island generation on a host-only backend: evaluate the
+        flattened [I·P] population in one backend call, breed per island
+        through the cached vmapped selection program, migrate across the
+        island axis (islands.migrate_local)."""
+        from repro.core import islands as isl
+
+        cfg = self._cfg
+        icfg = cfg.island
+        I, P, N = state.op.shape
+        op2 = np.asarray(state.op).reshape(I * P, N)
+        arg2 = np.asarray(state.arg).reshape(I * P, N)
+        fitness = np.asarray(self._backend.fitness(
+            op2, arg2, self._X, self._y,
+            np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
+            weight=self._weight, data_tile=cfg.data_tile),
+            np.float32).reshape(I, P)
+        i_best = fitness.argmin(axis=1)
+        rows = np.arange(I)
+        cand_fit = fitness[rows, i_best]
+        improved = cand_fit < np.asarray(state.best_fitness)
+        best_op = jnp.where(improved[:, None], np.asarray(state.op)[rows, i_best],
+                            state.best_op)
+        best_arg = jnp.where(improved[:, None], np.asarray(state.arg)[rows, i_best],
+                             state.best_arg)
+        best_fit = jnp.minimum(jnp.asarray(cand_fit), state.best_fitness)
+        sel = fitness
+        if cfg.parsimony:
+            sizes = np.asarray(tree_sizes(jnp.asarray(op2)), np.float32)
+            sel = fitness + cfg.parsimony * sizes.reshape(I, P)
+        next_gen = _backends.host_next_generation_islands(
+            cfg.tree_spec, icfg, cfg.mix, cfg.tourn_size, cfg.elitism)
+        keys, new_op, new_arg = next_gen(state.key, state.op, state.arg,
+                                         jnp.asarray(sel))
+        if icfg.migrate_k and I > 1:
+            e_op, e_arg = isl.island_elites(state.op, state.arg,
+                                            jnp.asarray(fitness), icfg.migrate_k)
+            new_op, new_arg = isl.migrate_local(
+                icfg, new_op, new_arg, e_op, e_arg, state.generation,
+                jnp.asarray(cand_fit))
+        return GPState(keys, new_op, new_arg, jnp.asarray(fitness), best_op,
+                       best_arg, best_fit, state.generation + 1)
 
     def _block_span(self, remaining: int) -> int:
         """Block size K = min(checkpoint period, callback period, explicit
@@ -438,7 +539,10 @@ class GPSession:
         cfg = self._cfg
         for i in range(total):
             self.step()
-            best = float(self.state.best_fitness)
+            bf = np.asarray(self.state.best_fitness)
+            if bf.ndim:  # island run: keep the per-island streams too
+                self.island_history.append(bf.copy())
+            best = float(bf.min()) if bf.ndim else float(bf)
             self.history.append(best)
             self.stats["host_syncs"] += 1
             if self._manager is not None:
@@ -487,11 +591,15 @@ class GPSession:
                 self.stats["blocks"] += 1
                 ran = gen_now - prev_gen
                 self._gen_host = gen_now
-                self.history.extend(float(b) for b in hist[:ran])
+                rows = hist[:ran]
+                if hist.ndim == 2:  # island run: [K, I] per-island streams
+                    self.island_history.extend(np.asarray(rows))
+                    rows = rows.min(axis=1)
+                self.history.extend(float(b) for b in rows)
                 if self._manager is not None:
                     self._manager.maybe_save(self.state, gen_now)
                 stopped = ran < K or (cfg.stop_fitness is not None and ran
-                                      and hist[ran - 1] <= cfg.stop_fitness)
+                                      and rows[ran - 1] <= cfg.stop_fitness)
                 last = stopped or gen_now >= target
                 if self._callback is not None and ran and (
                         gen_now % self._callback_every == 0 or last):
@@ -519,15 +627,37 @@ class GPSession:
 
     # --- results -------------------------------------------------------------
 
+    def _champion(self) -> tuple[np.ndarray, np.ndarray]:
+        """(best_op, best_arg) of the overall champion as host arrays —
+        for island runs, the best tree across ALL islands (one sync)."""
+        self._require_state()
+        best_op, best_arg, bf = jax.device_get(
+            (self.state.best_op, self.state.best_arg, self.state.best_fitness))
+        if np.ndim(bf):
+            i = int(np.argmin(bf))
+            best_op, best_arg = best_op[i], best_arg[i]
+        return np.asarray(best_op), np.asarray(best_arg)
+
     def best_expression(self) -> str:
         """The champion tree decoded to an infix string (feature names
-        substituted when the session has them). Reads best_op/best_arg
-        back from the device — one host sync."""
-        self._require_state()
-        return to_string(np.asarray(self.state.best_op),
-                         np.asarray(self.state.best_arg),
-                         feature_names=self.feature_names,
+        substituted when the session has them) — the best across all
+        islands for an island-batched run. Reads best_op/best_arg back
+        from the device — one host sync."""
+        op, arg = self._champion()
+        return to_string(op, arg, feature_names=self.feature_names,
                          const_table=np.asarray(self._cfg.tree_spec.const_table()))
+
+    def island_expressions(self) -> list[str]:
+        """Each island's champion decoded to an infix string (a length-1
+        list for the classic layout) — one host sync."""
+        self._require_state()
+        best_op, best_arg = jax.device_get((self.state.best_op,
+                                            self.state.best_arg))
+        best_op, best_arg = np.atleast_2d(best_op), np.atleast_2d(best_arg)
+        consts = np.asarray(self._cfg.tree_spec.const_table())
+        return [to_string(o, a, feature_names=self.feature_names,
+                          const_table=consts)
+                for o, a in zip(best_op, best_arg)]
 
     def predict(self, X, *, layout: str = "rows") -> np.ndarray:
         """Best tree evaluated on new data via this session's backend:
@@ -537,8 +667,9 @@ class GPSession:
         self._require_state()
         X = np.asarray(X, np.float32)
         X_fm = feature_major(X) if layout == "rows" else X
+        best_op, best_arg = self._champion()
         preds = self._backend.evaluate(
-            jnp.asarray(self.state.best_op)[None], jnp.asarray(self.state.best_arg)[None],
+            jnp.asarray(best_op)[None], jnp.asarray(best_arg)[None],
             jnp.asarray(X_fm), self._cfg.tree_spec.const_table(), self._cfg.tree_spec)
         return np.asarray(preds)[0]
 

@@ -109,16 +109,20 @@ def _eval_fitness_kernel(op_ref, arg_ref, x_ref, y_ref, w_ref, const_ref, out_re
     y = y_ref[...]  # f32[Db]
     wgt = w_ref[...]  # f32[Db]
     spec = fit.FitnessSpec(kernel, n_classes=n_classes, precision=precision)
-    partial = fit.get_kernel(kernel).moments(preds, y, wgt, spec)  # [Pb, M]
+    kern = fit.get_kernel(kernel)
+    partial = kern.moments(preds, y, wgt, spec)  # [Pb, M]
 
-    # accumulate across data tiles (innermost grid dim revisits out block)
+    # merge across data tiles (innermost grid dim revisits the out
+    # block): elementwise sum, or the kernel's pairwise combine —
+    # pearson/r2's Chan merge of centered moments is plain jnp, so it
+    # traces inside the Pallas body like any other moment math
     @pl.when(j == 0)
     def _init():
         out_ref[...] = partial
 
     @pl.when(j != 0)
     def _acc():
-        out_ref[...] = out_ref[...] + partial
+        out_ref[...] = kern.merge_moments(out_ref[...], partial, spec)
 
 
 def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,

@@ -42,10 +42,14 @@ def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
                       fit_spec: FitnessSpec, weight=None, tile: int = 65536):
     """`moments_ref`, scanning the data dimension in tiles so the
     [pop, nodes, data] evaluation buffer never exceeds one tile — the jnp
-    analogue of the Pallas kernel's VMEM tiling. A caller-supplied `weight`
-    (dataset padding mask, weight 0 on padded points) composes with the
-    internal tile-padding mask; moments of zero-weight points are exact
-    zeros, so tiling never changes the result."""
+    analogue of the Pallas kernel's VMEM tiling. Tile partials merge via
+    the kernel's `merge_moments` (elementwise sum, or the kernel's
+    pairwise combine — e.g. pearson/r2's Chan merge of centered
+    moments; the all-zeros init is a merge identity by contract). A
+    caller-supplied `weight` (dataset padding mask, weight 0 on padded
+    points) composes with the internal tile-padding mask; moments of
+    zero-weight points are exact zeros, so tiling never changes the
+    result."""
     import jax
 
     from repro.core.fitness import get_kernel
@@ -68,8 +72,9 @@ def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
 
     def body(acc, inp):
         Xt, yt, wt = inp
-        return acc + moments_ref(op, arg, Xt, yt, const_table, tree_spec,
-                                 fit_spec, weight=wt), None
+        part = moments_ref(op, arg, Xt, yt, const_table, tree_spec,
+                           fit_spec, weight=wt)
+        return kern.merge_moments(acc, part, fit_spec), None
 
     out, _ = jax.lax.scan(
         body, jnp.zeros((op.shape[0], kern.n_moments), jnp.float32), (Xs, ys, ws))

@@ -10,6 +10,11 @@ Mesh/island runs ride the same door (requires that many local devices,
 e.g. under --xla_force_host_platform_device_count):
 
     ... --mesh data=2,model=2,pod=2
+
+Island-model runs work on ANY of the above — one device or a mesh
+(pods × in-device islands when both are present):
+
+    ... --islands 4 --migrate-every 5 --migrate-k 2 --island-topology torus
 """
 from __future__ import annotations
 
@@ -41,23 +46,29 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
                 topology: MeshTopology | None = None,
                 archive: str | None = None, seed: int = 0, log=print,
                 ckpt_dir: str | None = None, ckpt_every: int = 10,
-                seeds=None, archive_every: int = 1):
+                seeds=None, archive_every: int = 1, islands: int = 1,
+                migrate_every: int = 10, migrate_k: int = 4,
+                island_topology: str = "ring"):
     """One archived GP run on a named dataset through the GPSession door.
 
     `archive_every` is the callback (= evolution-block) period: the run
     stays device-resident for that many generations per dispatch, and the
     archive gets one record per block boundary (the per-generation
-    best-fitness curve still lands in full via `sess.history`)."""
+    best-fitness curve still lands in full via `sess.history`).
+    `islands > 1` runs the island-model layout — `pop` trees PER island —
+    on whatever topology the run uses (docs/islands.md)."""
     kw = dict(pop_size=pop, max_depth=depth, n_consts=8, generations=generations,
               backend=backend, topology=topology,
-              checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every)
+              checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every,
+              islands=islands, migrate_every=migrate_every, migrate_k=migrate_k,
+              island_topology=island_topology)
     if fn_set != "auto":
         kw["fn_set"] = fn_set
     history = []
 
     def archive_gen(_, state):
         g = int(state.generation) - 1  # absolute index, stable across resumes
-        best = float(state.best_fitness)
+        best = float(np.min(state.best_fitness))  # min across islands
         # full per-generation curve from the block's metrics stream
         history.extend(sess.history[len(history):])
         if archive:
@@ -103,12 +114,25 @@ def main():
     ap.add_argument("--archive-every", type=int, default=1,
                     help="generations per evolution block / archive record "
                          "(larger = fewer host syncs)")
+    ap.add_argument("--islands", type=int, default=1,
+                    help="island-model layout: islands of --pop trees each "
+                         "(works single-device and on any --mesh; with a pod "
+                         "axis, islands spread over pods)")
+    ap.add_argument("--migrate-every", type=int, default=10,
+                    help="generations between island migration events")
+    ap.add_argument("--migrate-k", type=int, default=4,
+                    help="elites exchanged per migration event")
+    ap.add_argument("--island-topology", default="ring",
+                    choices=["ring", "torus", "broadcast-best"],
+                    help="migration routing between islands")
     args = ap.parse_args()
     run_dataset(args.dataset, generations=args.generations, pop=args.pop,
                 depth=args.depth, backend=args.backend,
                 topology=parse_mesh(args.mesh), archive=args.archive,
                 seed=args.seed, ckpt_dir=args.ckpt_dir, seeds=args.seed_exprs,
-                archive_every=args.archive_every)
+                archive_every=args.archive_every, islands=args.islands,
+                migrate_every=args.migrate_every, migrate_k=args.migrate_k,
+                island_topology=args.island_topology)
 
 
 if __name__ == "__main__":

@@ -210,10 +210,12 @@ def test_correlation_kernels_degenerate_trees():
     good = y[None, :] * 1.001
     k = fit.get_kernel("pearson")
     spec = FitnessSpec("pearson")
-    # moments summed across 4 simulated shards, then reduced
-    m = sum(k.moments(jnp.concatenate([const, good])[:, i * 128:(i + 1) * 128],
-                      y[i * 128:(i + 1) * 128], jnp.ones(128), spec)
-            for i in range(4))
+    # moments merged across 4 simulated shards (the kernel's Chan
+    # combine — centered moments are NOT plain-summable), then reduced
+    parts = [k.moments(jnp.concatenate([const, good])[:, i * 128:(i + 1) * 128],
+                       y[i * 128:(i + 1) * 128], jnp.ones(128), spec)
+             for i in range(4)]
+    m = fit.fold_moment_partials(k, parts, spec)
     f = np.asarray(k.reduce_moments(m, spec))
     assert f[0] > 0.99, f"constant tree scored as correlated: {f[0]}"
     assert f[1] < 0.01, f"near-perfect tree mis-scored: {f[1]}"

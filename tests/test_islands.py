@@ -1,0 +1,460 @@
+"""First-class island-model evolution: migration semantics (ring arrival
+order, torus alternation, broadcast-best, migrate_every phase under
+ragged block boundaries, no migration from frozen generations),
+islands=1 bitwise-legacy, heterogeneous per-island search, island-batched
+checkpoint round-trip, the scalar-backend island loop, and the
+pods × in-device-islands mesh path (subprocess)."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GPConfig, IslandConfig, OperatorMix, TreeSpec, engine
+from repro.core import fitness as fit
+from repro.core import islands as isl
+from repro.core.trees import generate_population
+from repro.data.datasets import kepler
+from repro.data.loader import feature_major
+from repro.gp import GPSession
+
+
+def _tagged_elites(I, k, N, base=100):
+    """int32[I, k, N] elites whose values identify their source island."""
+    e = np.zeros((I, k, N), np.int32)
+    for i in range(I):
+        e[i] = base * (i + 1)
+    return jnp.asarray(e), jnp.asarray(e + 7)
+
+
+def _island_cfg(pop=12, islands=4, migrate_every=2, migrate_k=2, depth=4, **kw):
+    return GPConfig(
+        pop_size=pop, tree_spec=TreeSpec(max_depth=depth, n_features=1, n_consts=8),
+        island=IslandConfig(islands=islands, migrate_every=migrate_every,
+                            migrate_k=migrate_k, **kw))
+
+
+# --- migration routing (unit) ------------------------------------------------
+
+
+def test_migrate_local_ring_arrival_order():
+    """Ring: island i's last-k offspring slots receive island (i-1)'s
+    elites on a due generation, and nothing moves off-cycle."""
+    I, P, N, k = 4, 6, 5, 2
+    icfg = IslandConfig(islands=I, migrate_every=3, migrate_k=k)
+    e_op, e_arg = _tagged_elites(I, k, N)
+    new_op = jnp.zeros((I, P, N), jnp.int32)
+    new_arg = jnp.zeros((I, P, N), jnp.int32)
+    fit_best = jnp.zeros((I,), jnp.float32)
+
+    # generation 2 → 2 % 3 == 2 == migrate_every - 1: due
+    out_op, out_arg = isl.migrate_local(icfg, new_op, new_arg, e_op, e_arg,
+                                        jnp.asarray(2), fit_best)
+    for i in range(I):
+        src = (i - 1) % I
+        np.testing.assert_array_equal(np.asarray(out_op)[i, -k:],
+                                      np.asarray(e_op)[src],
+                                      err_msg=f"island {i} should hold "
+                                              f"island {src}'s elites")
+        np.testing.assert_array_equal(np.asarray(out_arg)[i, -k:],
+                                      np.asarray(e_arg)[src])
+        assert (np.asarray(out_op)[i, :-k] == 0).all()  # only last-k slots
+
+    # generation 1 → off-cycle: unchanged
+    out_op, _ = isl.migrate_local(icfg, new_op, new_arg, e_op, e_arg,
+                                  jnp.asarray(1), fit_best)
+    assert (np.asarray(out_op) == 0).all()
+
+
+def test_migrate_local_torus_alternates_directions():
+    """Torus on a 2x2 grid: even migration events shift east (within
+    grid rows), odd events shift south (across rows)."""
+    I, P, N, k = 4, 4, 3, 1
+    icfg = IslandConfig(islands=I, migrate_every=1, migrate_k=k,
+                        topology="torus")
+    e_op, e_arg = _tagged_elites(I, k, N)
+    zeros = jnp.zeros((I, P, N), jnp.int32)
+    fb = jnp.zeros((I,), jnp.float32)
+
+    # grid index: island i = (row r = i // 2, col c = i % 2)
+    # event 0 (generation 0): east — (r, c) receives (r, c-1)
+    out_e, _ = isl.migrate_local(icfg, zeros, zeros, e_op, e_arg,
+                                 jnp.asarray(0), fb)
+    # event 1 (generation 1): south — (r, c) receives (r-1, c)
+    out_s, _ = isl.migrate_local(icfg, zeros, zeros, e_op, e_arg,
+                                 jnp.asarray(1), fb)
+    for i in range(I):
+        r, c = divmod(i, 2)
+        east_src = r * 2 + (c - 1) % 2
+        south_src = ((r - 1) % 2) * 2 + c
+        np.testing.assert_array_equal(np.asarray(out_e)[i, -k:],
+                                      np.asarray(e_op)[east_src])
+        np.testing.assert_array_equal(np.asarray(out_s)[i, -k:],
+                                      np.asarray(e_op)[south_src])
+
+
+def test_migrate_local_broadcast_best():
+    """broadcast-best: every island receives the champion island's elites
+    (champion = argmin of the per-island best fitness)."""
+    I, P, N, k = 3, 4, 3, 2
+    icfg = IslandConfig(islands=I, migrate_every=1, migrate_k=k,
+                        topology="broadcast-best")
+    e_op, e_arg = _tagged_elites(I, k, N)
+    zeros = jnp.zeros((I, P, N), jnp.int32)
+    fb = jnp.asarray([3.0, 1.0, 2.0])  # island 1 is champion
+    out_op, _ = isl.migrate_local(icfg, zeros, zeros, e_op, e_arg,
+                                  jnp.asarray(0), fb)
+    for i in range(I):
+        np.testing.assert_array_equal(np.asarray(out_op)[i, -k:],
+                                      np.asarray(e_op)[1])
+
+
+def test_torus_grid_factorization():
+    assert isl.torus_grid(4) == (2, 2)
+    assert isl.torus_grid(12) == (3, 4)
+    assert isl.torus_grid(7) == (1, 7)  # prime → degenerates to a ring
+
+
+# --- layout & engine ---------------------------------------------------------
+
+
+def test_islands_one_is_bitwise_legacy():
+    """islands=1 keeps the legacy un-batched state and the exact same
+    trajectory as a config that never mentions islands."""
+    X_rows, y, _ = kepler()
+    s0 = GPSession(pop_size=16, generations=4, kernel="r", backend="jnp")
+    s0.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    s1 = GPSession(pop_size=16, generations=4, kernel="r", backend="jnp",
+                   islands=1)
+    s1.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert s1.state.op.ndim == 2 and s1.island_history == []
+    for name, a, b in zip(s0.state._fields, jax.tree.leaves(s0.state),
+                          jax.tree.leaves(s1.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"GPState.{name} diverged")
+
+
+def test_island_block_bitwise_identical_to_stepwise():
+    """K scanned island generations == K dispatched island steps, bit for
+    bit — migrations land on the same absolute generations either way."""
+    X_rows, y, _ = kepler()
+    cfg = _island_cfg(pop=12, islands=4, migrate_every=2, migrate_k=2)
+    X, yj = jnp.asarray(feature_major(X_rows)), jnp.asarray(y)
+    K = 5
+    s_step = engine.init_state(cfg, jax.random.PRNGKey(0))
+    for _ in range(K):
+        s_step = engine.evolve_step(cfg, s_step, X, yj)
+    s_blk, hist = engine.evolve_block(
+        cfg, engine.init_state(cfg, jax.random.PRNGKey(0)), X, yj, None,
+        n_steps=K)
+    for name, a, b in zip(s_step._fields, jax.tree.leaves(s_step),
+                          jax.tree.leaves(s_blk)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"GPState.{name} diverged")
+    assert hist.shape == (K, 4)  # per-island best-fitness streams
+    np.testing.assert_array_equal(np.asarray(hist)[-1],
+                                  np.asarray(s_step.best_fitness))
+
+
+def test_migration_phase_stable_under_ragged_blocks():
+    """migrate_every phase is anchored to the absolute generation
+    counter: ragged block boundaries (callback period 3 against
+    migrate_every 2, final partial block) reproduce the monolithic run
+    bit for bit."""
+    X_rows, y, _ = kepler()
+    kw = dict(pop_size=12, generations=7, kernel="r", backend="jnp",
+              islands=3, migrate_every=2, migrate_k=2)
+    s_ragged = GPSession(callback=lambda g, st: None, callback_every=3, **kw)
+    s_ragged.fit(X_rows, y, key=jax.random.PRNGKey(1))  # blocks 3, 3, 1
+    s_mono = GPSession(**kw)
+    s_mono.fit(X_rows, y, key=jax.random.PRNGKey(1))  # one block of 7
+    assert s_ragged.stats["blocks"] == 3 and s_mono.stats["blocks"] == 1
+    for name, a, b in zip(s_mono.state._fields, jax.tree.leaves(s_mono.state),
+                          jax.tree.leaves(s_ragged.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"GPState.{name} diverged")
+    np.testing.assert_array_equal(np.asarray(s_mono.island_history),
+                                  np.asarray(s_ragged.island_history))
+
+
+def test_frozen_generations_do_not_migrate():
+    """Early-stop freeze discards frozen generations wholesale —
+    including their migrations. With migrate_every=1 (a migration EVERY
+    generation) and a stop threshold reached at generation 1, a 8-step
+    block must leave the state exactly where step 1 left it."""
+    X_rows, y, _ = kepler()
+    cfg = dataclasses.replace(_island_cfg(pop=12, islands=3, migrate_every=1,
+                                          migrate_k=2), stop_fitness=1e9)
+    X, yj = jnp.asarray(feature_major(X_rows)), jnp.asarray(y)
+    one = engine.evolve_step(cfg, engine.init_state(cfg, jax.random.PRNGKey(0)),
+                             X, yj)
+    blk, hist = engine.evolve_block(
+        cfg, engine.init_state(cfg, jax.random.PRNGKey(0)), X, yj, None,
+        n_steps=8)
+    assert int(blk.generation) == 1
+    for name, a, b in zip(one._fields, jax.tree.leaves(one),
+                          jax.tree.leaves(blk)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"GPState.{name} diverged")
+    # history rows after the freeze all repeat generation 1's snapshot
+    assert np.all(np.asarray(hist) == np.asarray(hist)[0])
+
+
+def test_heterogeneous_island_session():
+    """Per-island operator mixes / tournament sizes / point rates drive
+    one compiled program; per-island streams and champions surface."""
+    X_rows, y, _ = kepler()
+    s = GPSession(
+        pop_size=12, generations=5, kernel="r", backend="jnp", islands=3,
+        migrate_every=2, migrate_k=1,
+        island_mixes=(OperatorMix(), OperatorMix(0.05, 0.05, 0.05, 0.85),
+                      OperatorMix(0.1, 0.3, 0.3, 0.3)),
+        island_tourn_sizes=(4, 10, 7), island_point_rates=(0.1, 0.25, 0.5))
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert s.islands == 3
+    assert s.state.op.shape[0] == 3
+    assert len(s.history) == 5 and len(s.island_history) == 5
+    assert s.island_history[0].shape == (3,)
+    assert s.island_best_fitness.shape == (3,)
+    assert len(s.island_expressions()) == 3
+    assert s.best_fitness == pytest.approx(float(s.island_best_fitness.min()))
+    # per-generation mins agree between the two histories
+    np.testing.assert_allclose(np.asarray(s.history),
+                               np.asarray(s.island_history).min(axis=1))
+    # champion decode/predict pick the best island
+    assert len(s.best_expression()) > 0
+    assert s.predict(X_rows[:4]).shape == (4,)
+
+
+def test_island_config_validation():
+    with pytest.raises(ValueError, match="topology"):
+        IslandConfig(topology="hypercube")
+    with pytest.raises(ValueError, match="mixes"):
+        IslandConfig(islands=3, mixes=(OperatorMix(),))
+    with pytest.raises(ValueError, match="migrate_every"):
+        IslandConfig(migrate_every=0)  # % 0 in jit is silent garbage
+    with pytest.raises(ValueError, match="islands"):
+        IslandConfig(islands=0)
+    with pytest.raises(ValueError, match="migrate_k"):
+        IslandConfig(migrate_k=-1)
+    with pytest.raises(ValueError, match="migrate_k"):
+        engine.init_state(_island_cfg(pop=4, islands=2, migrate_k=8),
+                          jax.random.PRNGKey(0))
+
+
+def test_legacy_migrate_aliases_fold_into_island_config():
+    """GPConfig(migrate_every=3) — the pre-island flat surface — lands on
+    IslandConfig and the legacy fields mirror it; an explicit
+    IslandConfig value always beats the alias, so replacing the island
+    on a config that once used the alias can't resurrect the old value."""
+    cfg = GPConfig(migrate_every=3, migrate_k=2)
+    assert cfg.island.migrate_every == 3 and cfg.island.migrate_k == 2
+    assert cfg.migrate_every == 3 and cfg.migrate_k == 2
+    cfg2 = GPConfig(island=IslandConfig(islands=2, migrate_every=7))
+    assert cfg2.migrate_every == 7
+    # the stale mirror (3) must not clobber the explicitly requested 20
+    cfg3 = dataclasses.replace(cfg, island=IslandConfig(islands=4,
+                                                        migrate_every=20))
+    assert cfg3.island.migrate_every == 20 and cfg3.migrate_every == 20
+
+
+def test_island_state_checkpoint_roundtrip(tmp_path):
+    """The island-batched GPState pytree round-trips through the
+    checkpoint layer — and a session resumes from it."""
+    from repro.ckpt import checkpoint as ck
+
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=12, generations=4, kernel="r", backend="jnp",
+                  islands=3, migrate_every=2,
+                  checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    s._manager.wait()
+    restored, step = s._manager.restore_latest(like=jax.device_get(s.state))
+    assert step == 4
+    for name, a, b in zip(s.state._fields, jax.tree.leaves(s.state),
+                          jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"GPState.{name} diverged")
+    # a fresh session restores and continues from generation 4
+    s2 = GPSession(pop_size=12, generations=4, kernel="r", backend="jnp",
+                   islands=3, migrate_every=2,
+                   checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    s2.ingest(X_rows, y)
+    s2.init(key=jax.random.PRNGKey(9))
+    assert s2._gen_host == 4
+    assert s2.state.op.shape == (3, 12, 63)
+    del ck  # imported to assert the module stays importable standalone
+
+
+def test_scalar_backend_runs_islands():
+    """The paper's 1-CPU_SP baseline runs the same island semantics on
+    the host (per-island breeding + in-device migration lowering)."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=10, generations=3, kernel="r", backend="scalar",
+                  islands=3, migrate_every=2, migrate_k=1)
+    s.fit(X_rows[:40], y[:40])
+    assert s.state.op.shape == (3, 10, 63)
+    assert len(s.island_history) == 3 and s.island_history[0].shape == (3,)
+    assert np.isfinite(s.best_fitness)
+
+
+# --- centered moments: hoisting + Chan combine --------------------------------
+
+
+def test_y_moment_hoisting_roundtrip():
+    """The tree-independent columns marked by y_moment_idx really are
+    tree-independent, equal y_moments(y, w), and scatter_tree_y
+    reassembles the full moment vector exactly."""
+    rng = np.random.RandomState(0)
+    preds = jnp.asarray(rng.randn(5, 64).astype(np.float32))
+    y = jnp.asarray(rng.randn(64).astype(np.float32))
+    w = jnp.ones(64)
+    for name in ("pearson", "r2"):
+        k = fit.get_kernel(name)
+        spec = fit.FitnessSpec(name)
+        m = k.moments(preds, y, w, spec)  # [P, M]
+        y_cols = np.asarray(m)[:, list(k.y_moment_idx)]
+        np.testing.assert_array_equal(y_cols, np.broadcast_to(y_cols[0],
+                                                              y_cols.shape))
+        np.testing.assert_allclose(y_cols[0],
+                                   np.asarray(k.y_moments(y, w, spec)),
+                                   rtol=1e-6)
+        rebuilt = fit.scatter_tree_y(
+            k, m[:, jnp.asarray(k.tree_moment_idx)], jnp.asarray(y_cols[0]))
+        np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(m))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_centered_moments_survive_large_mean_targets(backend):
+    """The ROADMAP cancellation caveat is closed: on a |mean| >> std
+    target (1e4 ± 1 — raw moments lost ALL variance resolution here),
+    the tiled moment paths now match the exact centered single pass."""
+    from repro.gp import get_backend
+
+    spec = TreeSpec(max_depth=4, n_features=2, n_consts=8)
+    op, arg = generate_population(jax.random.PRNGKey(5), 16, spec)
+    rng = np.random.RandomState(0)
+    X = rng.randn(2, 512).astype(np.float32)
+    y = (1e4 + rng.randn(512)).astype(np.float32)
+    consts = np.asarray(spec.const_table())
+    be = get_backend(backend)
+    for kernel in ("pearson", "r2"):
+        fs = fit.FitnessSpec(kernel)
+        kern = fit.get_kernel(kernel)
+        preds = be.evaluate(op, arg, jnp.asarray(X), jnp.asarray(consts), spec)
+        exact = np.asarray(fit.fitness_from_preds(
+            jnp.asarray(preds), jnp.asarray(y), fs))
+        # small tiles force many cross-tile merges (Pallas grid / scan).
+        # atol 2e-3: pearson's noise-floor guard may round a genuinely
+        # noise-level correlation (r² ~ 1e-3 on this target) down to 0 —
+        # the documented resolution limit, nothing like the old
+        # catastrophic mode where EVERY tree collapsed to fitness 1.0
+        tiled = np.asarray(kern.reduce_moments(
+            be.moments(op, arg, jnp.asarray(X), jnp.asarray(y), consts, spec,
+                       fs, data_tile=128), fs))
+        np.testing.assert_allclose(tiled, exact, rtol=2e-3, atol=2e-3,
+                                   err_msg=f"{backend}/{kernel}")
+
+
+def test_combine_moments_fold_matches_exact():
+    """Simulated 4-shard merge via fold_moment_partials == the exact
+    centered single pass (the test_gp_api degenerate-trees test covers
+    the guard; this one pins plain accuracy)."""
+    rng = np.random.RandomState(1)
+    preds = jnp.asarray(rng.randn(6, 256).astype(np.float32))
+    y = jnp.asarray((5 + rng.randn(256)).astype(np.float32))
+    w = jnp.ones(256)
+    for name in ("pearson", "r2"):
+        k = fit.get_kernel(name)
+        spec = fit.FitnessSpec(name)
+        exact = np.asarray(k.partial_fitness(preds, y, w, spec))
+        parts = [k.moments(preds[:, i * 64:(i + 1) * 64],
+                           y[i * 64:(i + 1) * 64], w[i * 64:(i + 1) * 64],
+                           spec) for i in range(4)]
+        merged = np.asarray(k.reduce_moments(
+            fit.fold_moment_partials(k, parts, spec), spec))
+        np.testing.assert_allclose(merged, exact, rtol=1e-4, atol=1e-5,
+                                   err_msg=name)
+        # zero partials are merge identities (scan-accumulator contract)
+        zed = fit.fold_moment_partials(
+            k, [jnp.zeros_like(parts[0]), parts[0]], spec)
+        np.testing.assert_allclose(np.asarray(zed), np.asarray(parts[0]),
+                                   rtol=1e-6, err_msg=f"{name} identity")
+
+
+# --- mesh: pods × in-device islands (subprocess) ------------------------------
+
+_SUBPROCESS_ISLAND_MESH = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.gp import GPSession, MeshTopology
+
+    rng = np.random.RandomState(1)
+    X_rows = np.abs(rng.randn(128, 2)).astype(np.float32) + 0.5
+    y = (X_rows[:, 0] ** 2 / X_rows[:, 1]).astype(np.float32)
+
+    # ACCEPTANCE: islands=4 on an 8-device mesh — 2 pods x 2 in-device
+    # islands, each island's population sharded over model — from the
+    # same GPSession.fit() call as the single-device run
+    s = GPSession(pop_size=16, generations=8, kernel="r", islands=4,
+                  migrate_every=3, migrate_k=2,
+                  topology=MeshTopology(data=2, model=2, pod=2))
+    s.fit(X_rows, y)
+    assert s.state.op.shape == (4, 16, 63), s.state.op.shape
+    assert s.generation == 8
+    assert len(s.island_history) == 8
+    assert s.island_history[0].shape == (4,)
+    assert np.isfinite(s.best_fitness)
+    assert len(s.best_expression()) > 0
+    assert s.stats["host_syncs"] == 1, s.stats
+
+    # in-device islands on a pod-less mesh: island axis replicated,
+    # populations sharded over model, data sharded (ragged rows pad)
+    s2 = GPSession(pop_size=16, generations=4, kernel="r", islands=4,
+                   migrate_every=2, topology=MeshTopology(data=2, model=2))
+    s2.fit(X_rows[:101], y[:101])
+    assert s2.state.op.shape == (4, 16, 63)
+    assert s2.n_rows == 101 and np.isfinite(s2.best_fitness)
+
+    # torus + broadcast-best route on the pod mesh too
+    for topo in ("torus", "broadcast-best"):
+        st = GPSession(pop_size=8, generations=4, kernel="r", islands=4,
+                       migrate_every=2, migrate_k=1, island_topology=topo,
+                       topology=MeshTopology(data=2, model=2, pod=2))
+        st.fit(X_rows, y)
+        assert np.isfinite(st.best_fitness), topo
+
+    # two-pass kernels on the island mesh: hoisted+combined reduction
+    # matches the single-device island run closely
+    for kern in ("pearson", "r2"):
+        sm = GPSession(pop_size=16, generations=1, kernel=kern, islands=2,
+                       topology=MeshTopology(data=2, model=2, pod=2))
+        sm.ingest(X_rows, y)
+        sm.init(key=jax.random.PRNGKey(3))
+        sm.step()
+        ss = GPSession(pop_size=16, generations=1, kernel=kern, islands=2,
+                       backend="jnp")
+        ss.ingest(X_rows, y)
+        ss.init(key=jax.random.PRNGKey(3))
+        ss.step()
+        np.testing.assert_allclose(np.asarray(sm.state.fitness),
+                                   np.asarray(ss.state.fitness),
+                                   rtol=1e-4, atol=1e-4, err_msg=kern)
+    print("ISLAND_MESH_OK")
+""")
+
+
+def test_island_mesh_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_ISLAND_MESH], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ISLAND_MESH_OK" in r.stdout
