@@ -16,6 +16,15 @@ island-batched step costs over the classic layout:
     PYTHONPATH=src python benchmarks/smoke_bench.py --bench islands \
         --out BENCH_islands.json
 
+`--bench service` times the multi-tenant scheduler instead — N small
+heterogeneous jobs packed into one compiled island batch by `GPService`
+vs the same jobs run back-to-back as solo `islands=1` sessions — so the
+artifact (`BENCH_service.json`) tracks the packing win plus the
+no-recompile invariant (`service_compiles` must stay 1):
+
+    PYTHONPATH=src python benchmarks/smoke_bench.py --bench service \
+        --out BENCH_service.json
+
 The numbers are NOT cross-machine comparable (CI runners vary); the
 artifact records the machine-free quantities too (generations, rows,
 pop, host syncs) so a trajectory can be assembled from like runners.
@@ -130,16 +139,92 @@ def bench_islands(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
     }
 
 
+def bench_service(*, pop: int = 64, rows: int = 96, gens: int = GENS,
+                  depth: int = 5, seed: int = 0, n_jobs: int = 8,
+                  slots: int = 4) -> dict:
+    """`n_jobs` small heterogeneous jobs (ragged rows, mixed kernels,
+    unequal budgets) packed into `slots` islands by GPService vs the
+    same jobs as back-to-back solo islands=1 sessions. The service side
+    compiles ONE program; each distinct solo dataset shape compiles its
+    own — that per-job compile is exactly the cost packing removes, so
+    both wall times include compilation."""
+    import numpy as np
+
+    from repro.service import GPService, JobSpec
+
+    r = np.random.RandomState(seed)
+    kernels = ("r", "mse", "pearson")
+    jobs = []
+    for i in range(n_jobs):
+        n_rows = int(r.randint(rows // 2, rows + 1))
+        X = r.randn(n_rows, 3).astype(np.float32)
+        y = (X[:, 0] * X[:, 1] + np.sin(X[:, 0])).astype(np.float32)
+        jobs.append(JobSpec(X, y, kernel=kernels[i % len(kernels)],
+                            generations=gens + 2 * (i % 3), seed=i,
+                            name=f"bench-{i}"))
+
+    svc = GPService(slots=slots, pop_size=pop, max_depth=depth,
+                    n_features=3, data_cap=rows, block_size=gens)
+    handles = [svc.submit(j) for j in jobs]
+    t0 = time.perf_counter()
+    svc.run()
+    service_s = time.perf_counter() - t0
+    assert all(h.status == "done" for h in handles)
+
+    t0 = time.perf_counter()
+    solo_best = []
+    for j in jobs:
+        sess = GPSession(pop_size=pop, max_depth=depth, n_consts=8,
+                         kernel=j.kernel, backend="jnp",
+                         generations=j.generations)
+        sess.ingest(j.X, j.y)
+        sess.init(key=jax.random.PRNGKey(j.seed))
+        sess.evolve_block(j.generations)
+        jax.block_until_ready(sess.state.fitness)
+        solo_best.append(float(jax.numpy.min(sess.state.best_fitness)))
+    solo_s = time.perf_counter() - t0
+
+    total_gens = sum(j.generations for j in jobs)
+    return {
+        "bench": "service",
+        "backend": "jnp",
+        "n_jobs": n_jobs,
+        "slots": slots,
+        "pop": pop,
+        "data_cap": rows,
+        "depth": depth,
+        "total_generations": total_gens,
+        "service_s": round(service_s, 4),
+        "service_blocks": svc.stats["blocks"],
+        "service_compiles": svc.stats["compiles"],
+        "solo_s": round(solo_s, 4),
+        "solo_sessions": n_jobs,
+        "speedup": round(solo_s / service_s, 3),
+        "job_gens_per_sec": round(total_gens / service_s, 4),
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }
+
+
+BENCHES = {"loop": bench_loop, "islands": bench_islands,
+           "service": bench_service}
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", default="loop", choices=["loop", "islands"])
-    ap.add_argument("--pop", type=int, default=POP)
-    ap.add_argument("--rows", type=int, default=ROWS)
+    ap.add_argument("--bench", default="loop", choices=sorted(BENCHES))
+    ap.add_argument("--pop", type=int, default=None)
+    ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--gens", type=int, default=GENS)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    fn = bench_loop if args.bench == "loop" else bench_islands
-    rec = fn(pop=args.pop, rows=args.rows, gens=args.gens)
+    kw = dict(gens=args.gens)
+    if args.pop is not None:
+        kw["pop"] = args.pop
+    if args.rows is not None:
+        kw["rows"] = args.rows
+    rec = BENCHES[args.bench](**kw)
     out = args.out or f"BENCH_{args.bench}.json"
     with open(out, "w") as f:
         json.dump(rec, f, indent=1)

@@ -27,3 +27,33 @@ def reshard_state(state_host, cfg, mesh):
 def reshard_tree(tree_host, spec_tree, mesh):
     return jax.tree.map(
         lambda a, s: jax.device_put(a, NamedSharding(mesh, s)), tree_host, spec_tree)
+
+
+def gp_state_specs(cfg, mesh, *, data_axis="data", model_axis="model",
+                   pod_axis=None):
+    """PartitionSpecs of a GPState on `mesh` — exactly the specs the
+    engine's sharded step was built with (the same builder produces
+    both), so a resharded state lands where `sharded_evolve_step`/`_block`
+    expects it. Layout follows cfg.island.islands: classic (population on
+    (pod, model)) or island-batched (island axis on pod, population on
+    model)."""
+    from repro.core import engine
+
+    _, state_specs, *_ = engine._pick_step_builder(cfg)(
+        cfg, mesh, data_axis=data_axis, model_axis=model_axis,
+        pod_axis=pod_axis)
+    return state_specs
+
+
+def reshard_gp_state(state_host, cfg, mesh, *, data_axis="data",
+                     model_axis="model", pod_axis=None):
+    """Host-side GPState (a restored checkpoint) → device arrays sharded
+    for `mesh` — the GP run's elastic-scaling path: a state saved from an
+    `islands=I` run on one pod/device count resumes on another, as long
+    as the new mesh's axes still divide the layout (islands % pod == 0,
+    pop_size % model == 0; the engine builder validates). Whole-leaf
+    checkpoints make this pure re-placement, bit-identical by
+    construction."""
+    return reshard_tree(state_host, gp_state_specs(
+        cfg, mesh, data_axis=data_axis, model_axis=model_axis,
+        pod_axis=pod_axis), mesh)

@@ -372,6 +372,193 @@ def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
     return sess.state
 
 
+# --- multi-tenant step (repro.service) ----------------------------------------
+
+
+class TenantParams(NamedTuple):
+    """Per-slot search/termination parameters of a multi-tenant batch.
+    Every leaf is [I]-leading and TRACED — admission and eviction at
+    block boundaries rebind values on the same compiled program, so a
+    long-lived service never recompiles as jobs come and go. The only
+    static knobs of a tenant block are the shared shapes (`TreeSpec`,
+    pop_size, data capacity), the kernel tuple `lax.switch` branches
+    over, the tournament DRAW size (the random draw's shape — per-slot
+    `tourn` masks down from it, `core/evolve.tournament`) and elitism.
+
+        probs       f32[I, 4]   operator-mix probabilities per slot
+        tourn       int32[I]    active tournament size (≤ the draw size)
+        point_rate  f32[I]      point-mutation rate
+        kernel_id   int32[I]    index into the block's static kernel tuple
+        n_classes   f32[I]      classify arity (unused by other kernels)
+        precision   f32[I]      match tolerance (unused by other kernels)
+        stop        f32[I]      stop_fitness; -inf disables early stop
+        budget      int32[I]    generation budget; 0 marks an EMPTY slot
+    """
+
+    probs: jax.Array
+    tourn: jax.Array
+    point_rate: jax.Array
+    kernel_id: jax.Array
+    n_classes: jax.Array
+    precision: jax.Array
+    stop: jax.Array
+    budget: jax.Array
+
+
+class TenantState(NamedTuple):
+    """Island-batched engine state for a multi-tenant batch: the GPState
+    island layout with the shared lockstep `generation` scalar replaced
+    by per-slot `gens_done` counters — tenants start, stop and swap out
+    independently, so no scalar is shared across slots and
+    `islands.take_island`/`splice_island` move a whole job's evolution
+    state in ONE slice.
+
+        key           uint32[I, 2]    per-slot PRNG (a solo run's stream)
+        op/arg        int32[I, P, N]
+        fitness       f32[I, P]
+        best_op/arg   int32[I, N]
+        best_fitness  f32[I]
+        gens_done     int32[I]
+    """
+
+    key: jax.Array
+    op: jax.Array
+    arg: jax.Array
+    fitness: jax.Array
+    best_op: jax.Array
+    best_arg: jax.Array
+    best_fitness: jax.Array
+    gens_done: jax.Array
+
+
+def tenant_active(state: TenantState, params: TenantParams):
+    """bool[I]: which slots still evolve — budget not exhausted AND the
+    early-stop bar (params.stop, -inf = disabled) not reached. Works on
+    device arrays and host numpy alike."""
+    return (state.gens_done < params.budget) & jnp.logical_not(
+        state.best_fitness <= params.stop)
+
+
+def init_tenant_slot(key, pop_size: int, spec: TreeSpec) -> TenantState:
+    """ONE job's fresh sub-state (un-batched leaves, ready for
+    `islands.splice_island`). Keyed exactly like `init_state` with
+    islands == 1 — split once, population from the second half, slot key
+    from the first — so a packed job replays a solo session's PRNG
+    stream bit-for-bit."""
+    k0, k1 = jax.random.split(key)
+    op, arg = generate_population(k1, pop_size, spec)
+    N = spec.num_nodes
+    return TenantState(
+        key=k0, op=op, arg=arg,
+        fitness=jnp.full((pop_size,), jnp.inf, jnp.float32),
+        best_op=jnp.zeros((N,), jnp.int32), best_arg=jnp.zeros((N,), jnp.int32),
+        best_fitness=jnp.asarray(jnp.inf, jnp.float32),
+        gens_done=jnp.asarray(0, jnp.int32),
+    )
+
+
+def empty_tenant_state(islands: int, pop_size: int, spec: TreeSpec) -> TenantState:
+    """An all-empty batch (pair with budget-0 TenantParams rows: empty
+    slots never advance; their compute is frozen out)."""
+    I, P, N = islands, pop_size, spec.num_nodes
+    return TenantState(
+        key=jnp.zeros((I, 2), jnp.uint32),
+        op=jnp.zeros((I, P, N), jnp.int32), arg=jnp.zeros((I, P, N), jnp.int32),
+        fitness=jnp.full((I, P), jnp.inf, jnp.float32),
+        best_op=jnp.zeros((I, N), jnp.int32), best_arg=jnp.zeros((I, N), jnp.int32),
+        best_fitness=jnp.full((I,), jnp.inf, jnp.float32),
+        gens_done=jnp.zeros((I,), jnp.int32),
+    )
+
+
+def _switch_fitness(kernels: tuple, preds, y, w, kernel_id, n_classes, precision):
+    """f32[P] fitness of one slot's predictions under its TRACED kernel
+    choice: `lax.switch` over the block's static kernel tuple, each
+    branch the registered kernel's whole-dataset `partial_fitness` fed a
+    duck-typed spec whose n_classes/precision are traced f32 — the
+    kernels only consume them inside jnp ops, so one compiled program
+    serves every per-slot value."""
+    import types
+
+    duck = types.SimpleNamespace(n_classes=n_classes, precision=precision)
+    branches = [partial(lambda kern, p, yy, ww: kern.partial_fitness(p, yy, ww, duck),
+                        fit.get_kernel(name)) for name in kernels]
+    return jax.lax.switch(kernel_id, branches, preds, y, w)
+
+
+def _tenant_slot_step(spec: TreeSpec, kernels: tuple, tourn_draw: int,
+                      elitism: int, sub: TenantState, Xi, yi, wi,
+                      p: TenantParams) -> TenantState:
+    """One generation of ONE slot — deliberately the solo `_step_body`
+    re-derived on un-batched leaves (evaluate → whole-dataset fitness →
+    champion → split/breed → freeze), because the tenant batch runs it
+    under `lax.map`, whose scan body traces this function UN-vmapped:
+    the compiled reductions are the ones a solo `islands=1` session
+    runs, so packed-vs-solo parity is bitwise, not just approximate
+    (vmap would re-lower the fitness reductions batched and change f32
+    rounding). The freeze predicate is computed on the PRE-step state,
+    matching `_block_done`; a frozen (done or empty) slot's step
+    computes and discards, like every freeze in this engine."""
+    from repro.core.eval import evaluate_population
+
+    active = tenant_active(sub, p)
+    const_table = spec.const_table()
+    preds = evaluate_population(sub.op, sub.arg, Xi, const_table, spec)
+    fitness = _switch_fitness(kernels, preds, yi, wi, p.kernel_id,
+                              p.n_classes, p.precision)
+    i = jnp.argmin(fitness)
+    improved = fitness[i] < sub.best_fitness
+    best_op = jnp.where(improved, sub.op[i], sub.best_op)
+    best_arg = jnp.where(improved, sub.arg[i], sub.best_arg)
+    best_fit = jnp.minimum(fitness[i], sub.best_fitness)
+
+    breed = ev.make_island_breeder(spec, tourn_draw, elitism)
+    key, new_op, new_arg = breed(sub.key, sub.op, sub.arg, fitness,
+                                 p.probs, p.tourn, p.point_rate)
+    nxt = TenantState(key, new_op, new_arg, fitness, best_op, best_arg,
+                      best_fit, sub.gens_done + 1)
+    return jax.tree.map(lambda prev, new: jnp.where(active, new, prev), sub, nxt)
+
+
+def tenant_step(spec: TreeSpec, kernels: tuple, tourn_draw: int, elitism: int,
+                state: TenantState, X, y, weight,
+                params: TenantParams) -> TenantState:
+    """One generation of the whole batch: `lax.map` of the slot step over
+    the island axis. X f32[I, F, Dc], y f32[I, Dc], weight f32[I, Dc] —
+    every slot carries its OWN (padded, zero-weight-masked) dataset
+    slice, so heterogeneous jobs never evaluate each other's data."""
+    return jax.lax.map(
+        lambda t: _tenant_slot_step(spec, kernels, tourn_draw, elitism, *t),
+        (state, X, y, weight, params))
+
+
+def build_tenant_block(spec: TreeSpec, kernels: tuple, tourn_draw: int,
+                       elitism: int, n_steps: int):
+    """The service's ONE compiled program: block(state, X, y, weight,
+    params) -> (state, history f32[n_steps, I]) scanning `tenant_step`
+    `n_steps` generations per dispatch. Everything per-job is a traced
+    operand (TenantParams + the slot data buffers), so the scheduler
+    splices jobs in and out between dispatches without recompiling.
+    Kernel names are canonicalized (aliases collapse) at build time;
+    jit it with donate_argnums=(0,) — the caller owns that."""
+    kernels = tuple(fit.get_kernel(k).name for k in kernels)
+    for name in kernels:
+        if fit.get_kernel(name).partial_fitness is None:
+            raise ValueError(f"fitness kernel {name!r} has no whole-dataset "
+                             f"partial_fitness; the tenant block cannot "
+                             f"switch over it")
+
+    def block(state: TenantState, X, y, weight, params: TenantParams):
+        def body(s, _):
+            nxt = tenant_step(spec, kernels, tourn_draw, elitism, s, X, y,
+                              weight, params)
+            return nxt, nxt.best_fitness
+
+        return jax.lax.scan(body, state, None, length=n_steps)
+
+    return block
+
+
 # --- mesh-sharded step --------------------------------------------------------
 
 

@@ -134,6 +134,30 @@ def torus_grid(islands: int) -> tuple[int, int]:
     return r, islands // r
 
 
+def take_island(state, idx):
+    """Island `idx`'s slice of an island-batched state pytree: leaves with
+    a leading island axis lose it ([I, ...] -> [...]), scalar leaves (the
+    shared generation counter) pass through unchanged. The inverse of
+    `splice_island` — together they are the slot-level state swap the
+    multi-tenant service uses to move one job's evolution state in and
+    out of a batch."""
+    return jax.tree.map(lambda a: a[idx] if jnp.ndim(a) else a, state)
+
+
+def splice_island(state, idx, sub):
+    """Replace island slot `idx` of an island-batched state pytree with
+    `sub` (one island's un-batched leaves, as produced by `take_island`
+    or a fresh per-job init). Leaves whose rank matches the batched
+    leaf's (shared scalars) keep the batched value. Host-eager `.at[]`
+    updates — call between block dispatches, not inside jit."""
+    def put(a, v):
+        if jnp.ndim(a) == jnp.ndim(v):
+            return a  # shared leaf (e.g. the lockstep generation scalar)
+        return a.at[idx].set(v)
+
+    return jax.tree.map(put, state, sub)
+
+
 def island_elites(op, arg, fitness, k: int):
     """Per-island top-k trees of the just-evaluated population.
 

@@ -55,6 +55,7 @@ from repro.core.engine import GPConfig, GPState
 from repro.core.trees import to_string, tree_sizes
 from repro.data.loader import feature_major
 from repro.gp import backends as _backends
+from repro.runtime.fault import StepMonitor as _StepMonitor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,7 +187,9 @@ class GPSession:
         # island runs: one f32[I] row per generation (per-island best-
         # fitness streams); stays empty for the classic layout
         self.island_history: list[np.ndarray] = []
-        self.stats = {"host_syncs": 0, "blocks": 0}
+        self.stats = {"host_syncs": 0, "blocks": 0, "block_s_ema": None,
+                      "stragglers": []}
+        self._monitor = _StepMonitor()  # per-block wall time EMA + stragglers
         self.feature_names = list(feature_names) if feature_names else None
         self._callback = callback
         self._callback_every = max(1, int(callback_every))
@@ -270,19 +273,27 @@ class GPSession:
 
     # --- lifecycle -----------------------------------------------------------
 
-    def ingest(self, X, y, *, layout: str = "rows") -> "GPSession":
+    def ingest(self, X, y, *, layout: str = "rows",
+               sample_weight=None) -> "GPSession":
         """Load the dataset onto the session's devices. layout='rows' is
         sklearn-style [rows, features] float data (transposed to the
         paper's feature-major f32[F, D] Eq. 2 form internally);
         layout='features' accepts already-transposed [features, rows].
-        y is f32[D] targets (class ids as floats for the 'c' kernel). On
-        a mesh, rows that don't divide the data axis are padded with a
+        y is f32[D] targets (class ids as floats for the 'c' kernel).
+        `sample_weight` (f32[D], optional) scales each point's fitness
+        contribution; 0.0 excludes a point exactly (every kernel's
+        padding contract), so pre-padded data — e.g. a service job's
+        slot buffer replayed solo — evaluates bit-for-bit. On a mesh,
+        rows that don't divide the data axis are padded with a
         zero-weight mask (fitness stays exact; `n_rows` reports the real
-        count) and X/y/weight are device_put sharded; single-device
-        jittable backends get plain device arrays; host-only backends
-        keep numpy. Synchronous host work only — no device compute."""
+        count; sample weights compose with the mask) and X/y/weight are
+        device_put sharded; single-device jittable backends get plain
+        device arrays; host-only backends keep numpy. Synchronous host
+        work only — no device compute."""
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float32)
+        if sample_weight is not None:
+            sample_weight = np.asarray(sample_weight, np.float32)
         if layout == "rows":
             X_fm = feature_major(X)
         elif layout == "features":
@@ -301,6 +312,9 @@ class GPSession:
                 self._cfg, tree_spec=dataclasses.replace(spec, n_features=F))
 
         self._n_rows = D
+        if sample_weight is not None and sample_weight.shape != (D,):
+            raise ValueError(f"sample_weight shape {sample_weight.shape} does "
+                             f"not match {D} data points")
         if self.mesh is not None:
             from jax.sharding import NamedSharding
             from jax.sharding import PartitionSpec as P
@@ -311,6 +325,8 @@ class GPSession:
             # through every fitness kernel, so sharding is always exact
             n_data = self.mesh.shape["data"]
             X_fm, y, w = pad_feature_major(X_fm, y, n_data)
+            if sample_weight is not None:
+                w = w * np.pad(sample_weight, (0, w.shape[0] - D))
             if self._step_fn is None or self._built_for != (self._cfg, self.mesh):
                 # warm_start refits reuse the jitted programs; rebuild only
                 # when the config or mesh actually changed
@@ -325,10 +341,11 @@ class GPSession:
         elif self._backend.jittable:
             self._X = jnp.asarray(X_fm)
             self._y = jnp.asarray(y)
-            self._weight = None  # single device never pads
+            # single device never pads; an explicit weight threads through
+            self._weight = None if sample_weight is None else jnp.asarray(sample_weight)
         else:
             self._X, self._y = X_fm, y
-            self._weight = None
+            self._weight = sample_weight
         return self
 
     def init(self, *, key=None, seeds=None) -> "GPSession":
@@ -349,6 +366,53 @@ class GPSession:
             if restored is not None:
                 self.state = jax.tree.map(jnp.asarray, restored)
                 self._gen_host = int(step)
+        return self
+
+    # --- slot-level state swap (the service scheduler's surface) -------------
+
+    def export_island(self, idx: int):
+        """Island `idx`'s slice of the session state as an un-batched
+        sub-state pytree (leading island axis dropped; the shared
+        generation scalar rides along unchanged) — what a multi-tenant
+        scheduler lifts out of a batch when a slot's job finishes. Pure
+        host-eager slicing; no recompilation, no state mutation."""
+        from repro.core.islands import take_island
+
+        self._require_state()
+        if self.islands <= 1:
+            raise ValueError("export_island needs an island-batched run "
+                             "(islands > 1)")
+        if not 0 <= idx < self.islands:
+            raise ValueError(f"island {idx} out of range [0, {self.islands})")
+        return take_island(self.state, idx)
+
+    def import_island(self, idx: int, sub) -> "GPSession":
+        """Replace island slot `idx` with `sub` (an `export_island` slice
+        or any identically-shaped sub-state, e.g. a freshly initialized
+        one) — admission half of the slot swap. Eager `.at[].set`
+        updates on the live state; the compiled step/block programs are
+        untouched, so swapping populations between blocks never triggers
+        a recompile."""
+        from repro.core.islands import splice_island
+
+        self._require_state()
+        if self.islands <= 1:
+            raise ValueError("import_island needs an island-batched run "
+                             "(islands > 1)")
+        if not 0 <= idx < self.islands:
+            raise ValueError(f"island {idx} out of range [0, {self.islands})")
+        self.state = splice_island(self.state, idx, sub)
+        return self
+
+    def adopt_state(self, state: GPState) -> "GPSession":
+        """Install an externally built GPState (a checkpoint restored and
+        resharded elsewhere, a spliced batch, ...) as the session's live
+        state and resynchronize the host generation mirror — one host
+        sync, then the evolve loop continues from it as if the session
+        had produced it."""
+        self.state = jax.tree.map(jnp.asarray, state)
+        self._gen_host = int(self.state.generation)
+        self._gen_dirty = False
         return self
 
     def step(self) -> GPState:
@@ -582,13 +646,19 @@ class GPSession:
                 # and silently truncate the run
                 K = min(self._block_span(target - self._gen_host), quantum)
                 prev_gen = self._gen_host
-                _, history = self._dispatch_block(quantum, K)
-                # ONE sync per block: final generation counter + the
-                # best-fitness stream come back together
-                gen_now, hist = jax.device_get((self.state.generation, history))
+                # the monitor times dispatch THROUGH the block-boundary
+                # sync — the span a straggling host/device would stretch
+                with self._monitor:
+                    _, history = self._dispatch_block(quantum, K)
+                    # ONE sync per block: final generation counter + the
+                    # best-fitness stream come back together
+                    gen_now, hist = jax.device_get((self.state.generation,
+                                                    history))
                 gen_now = int(gen_now)
                 self.stats["host_syncs"] += 1
                 self.stats["blocks"] += 1
+                self.stats["block_s_ema"] = self._monitor.ema
+                self.stats["stragglers"] = self._monitor.stragglers
                 ran = gen_now - prev_gen
                 self._gen_host = gen_now
                 rows = hist[:ran]

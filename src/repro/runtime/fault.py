@@ -63,22 +63,36 @@ class HeartbeatMonitor:
         with self._lock:
             return [w for w, t in self._last.items() if now - t > self.deadline_s]
 
+    def remove(self, worker_id: str):
+        """Forget a worker that left ON PURPOSE (job evicted, host drained).
+        Without this, a worker that stops beating because its job finished
+        is indistinguishable from a dead one and `dead_workers()` reports
+        it forever. Unknown ids are a no-op — eviction paths may race a
+        worker that never got its first beat in."""
+        with self._lock:
+            self._last.pop(worker_id, None)
+
 
 def run_with_restarts(make_state: Callable, step_fn: Callable, n_steps: int,
-                      manager, *, max_restarts: int = 3, on_step=None):
+                      manager, *, max_restarts: int = 3, on_step=None,
+                      until: Callable | None = None):
     """Restart-from-checkpoint execution policy.
 
     make_state() builds a fresh state; step_fn(state, i) -> state may raise
     (node failure). On failure we restore the newest committed checkpoint
     and continue; state identity is preserved across restarts.
-    Returns (state, restarts)."""
+    `until(state) -> bool`, when given, ends the run early once it reports
+    the state finished — `n_steps` is then just a runaway bound (how
+    drain-until-idle loops, e.g. the GP service scheduler, ride this
+    policy without knowing their step count up front). Returns
+    (state, restarts)."""
     restarts = 0
     state = make_state()
     restored, step0 = manager.restore_latest(like=state)
     i = int(step0) if restored is not None else 0
     if restored is not None:
         state = restored
-    while i < n_steps:
+    while i < n_steps and not (until is not None and until(state)):
         try:
             state = step_fn(state, i)
             i += 1

@@ -1,0 +1,390 @@
+"""GPService — multi-tenant GP-as-a-service on one compiled program.
+
+The scheduler drives `core.engine.build_tenant_block` — ONE jitted
+K-generation block over a fixed `[I, P, N]` island batch — and does all
+job management at block boundaries on the host:
+
+    submit()   validate + enqueue (a JobHandle is returned immediately)
+    admit      free slots are filled from the queue (packer.pack_order);
+               a job's island sub-state is spliced in eagerly
+               (islands.splice_island) — fresh-initialized, or the saved
+               sub-state of a preempted/repacked job
+    dispatch   one block = K generations for every live slot; finished
+               slots are frozen on device (tenant_active), so ragged
+               budgets never block the batch
+    publish    finished/cancelled jobs are lifted out (take_island),
+               their champion decoded, their slot freed for the next
+               queued job — all operand rebinding, never a recompile
+
+Fault tolerance rides the seed scaffolds it was built for: the drain
+loop is `runtime.fault.run_with_restarts` steps (one step = one block,
+checkpointed by `ckpt.CheckpointManager`, restored after an injected or
+real failure), every occupied slot beats a `HeartbeatMonitor` worker
+that is `remove()`d on eviction, and a `StepMonitor` tracks per-block
+wall time. A checkpoint taken at one slot count can be repacked onto a
+service with another via `adopt()` — jobs are slot-position independent
+because every slot-varying value is an operand.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine
+from repro.core import fitness as fit
+from repro.core.engine import TenantState
+from repro.core.islands import splice_island, take_island
+from repro.core.trees import TreeSpec, to_string
+from repro.runtime.fault import HeartbeatMonitor, StepMonitor, run_with_restarts
+from repro.service.job import CANCELLED, DONE, PENDING, RUNNING, JobHandle, JobSpec
+from repro.service.packer import JobBatch, pack_order
+
+# every registered kernel with a whole-dataset partial_fitness — the
+# default switch set a service compiles over
+DEFAULT_KERNELS = ("r", "c", "m", "mse", "pearson", "r2")
+
+
+class GPService:
+    """A multi-tenant GP scheduler with a fixed packed layout.
+
+    Static shape (chosen once, compiled once): `slots` islands of
+    `pop_size` trees over `tree_spec` (or max_depth/n_features
+    shorthand), per-slot data capacity `data_cap`, the `kernels` tuple
+    the block switches over, the tournament draw size `tourn_draw` (an
+    upper bound on any job's tourn_size) and `elitism`. Everything else
+    is per-job and traced.
+
+    `block_size` is K, the generations per dispatch — the admission/
+    eviction (and checkpoint/restart) quantum. `checkpoint_dir` arms
+    restart-from-checkpoint; `checkpoint_every` counts blocks.
+    `fault_hook(block_index)` is the failure-injection point the tests
+    use — it runs at the top of every scheduler step and may raise."""
+
+    def __init__(self, *, slots: int = 8, pop_size: int = 64,
+                 tree_spec: TreeSpec | None = None, max_depth: int = 5,
+                 n_features: int = 4, data_cap: int = 256,
+                 kernels: tuple = DEFAULT_KERNELS, tourn_draw: int = 10,
+                 elitism: int = 1, block_size: int = 8,
+                 strategy: str = "fifo", checkpoint_dir: str | None = None,
+                 checkpoint_every: int = 1, checkpoint_keep: int = 4,
+                 heartbeat_deadline_s: float = 10.0, fault_hook=None):
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        self.tree_spec = (tree_spec if tree_spec is not None
+                          else TreeSpec(max_depth=max_depth,
+                                        n_features=n_features))
+        self.slots = slots
+        self.pop_size = pop_size
+        self.kernels = tuple(fit.get_kernel(k).name for k in kernels)
+        self.tourn_draw = tourn_draw
+        self.elitism = elitism
+        self.block_size = block_size
+        self.strategy = strategy
+        self.batch = JobBatch(slots, self.tree_spec.n_features, data_cap,
+                              self.kernels, tourn_draw)
+        self._block = jax.jit(engine.build_tenant_block(
+            self.tree_spec, self.kernels, tourn_draw, elitism, block_size),
+            donate_argnums=(0,))
+        self._state = engine.empty_tenant_state(slots, pop_size, self.tree_spec)
+        self._gens = np.zeros((slots,), np.int64)  # host mirror of gens_done
+        self._jobs: dict[int, JobHandle] = {}
+        self._pending: list[JobHandle] = []
+        self._next_id = 0
+        self._fault_hook = fault_hook
+        self.heartbeats = HeartbeatMonitor(deadline_s=heartbeat_deadline_s)
+        self.monitor = StepMonitor()
+        self.stats = {"blocks": 0, "admissions": 0, "evictions": 0,
+                      "restarts": 0, "compiles": 0, "block_s_ema": None,
+                      "stragglers": []}
+        self._manager = None
+        if checkpoint_dir:
+            from repro.ckpt.checkpoint import CheckpointManager
+
+            self._manager = CheckpointManager(checkpoint_dir,
+                                              keep=checkpoint_keep,
+                                              every=checkpoint_every)
+        self._live_snap = None
+        self._ckpt_step = 0  # block index of the restart policy's clock
+
+    # --- tenant API -----------------------------------------------------------
+
+    def submit(self, spec: JobSpec) -> JobHandle:
+        """Validate against the compiled layout and enqueue. Returns the
+        job's handle immediately — the scheduler loop (`run`/`result`)
+        does the work."""
+        self.batch.validate(spec)
+        handle = JobHandle(self._next_id, spec)
+        self._next_id += 1
+        self._jobs[handle.job_id] = handle
+        self._pending.append(handle)
+        return handle
+
+    def poll(self, job_id: int) -> dict:
+        """Plain-data progress snapshot of one job (no device sync — the
+        scheduler mirrors everything host-side at block boundaries)."""
+        return self._jobs[job_id].snapshot()
+
+    def result(self, job_id: int, *, drive: bool = True,
+               max_blocks: int = 100_000) -> JobHandle:
+        """The job's handle once it finished. With drive=True (default)
+        the calling thread runs the scheduler loop until the whole
+        queue drains — this is a single-process service; the caller IS
+        the scheduler."""
+        handle = self._jobs[job_id]
+        if not handle.finished and drive:
+            self.run(max_blocks=max_blocks)
+        if not handle.finished:
+            raise RuntimeError(f"job {job_id} is {handle.status} after the "
+                               f"scheduler loop — raise max_blocks?")
+        return handle
+
+    def cancel(self, job_id: int) -> bool:
+        """Cancel a job: a pending one leaves the queue immediately; a
+        running one is evicted at the next block boundary with partial
+        results. Returns False if it already finished."""
+        handle = self._jobs[job_id]
+        if handle.finished:
+            return False
+        if handle.status == PENDING:
+            self._pending.remove(handle)
+            handle.status = CANCELLED
+            return True
+        handle._cancel = True
+        return True
+
+    # --- scheduler loop -------------------------------------------------------
+
+    def idle(self) -> bool:
+        return not self._pending and not self.batch.occupied
+
+    def run(self, *, max_blocks: int = 100_000, max_restarts: int = 3) -> "GPService":
+        """Drain the queue: admit → dispatch → publish per block until no
+        job is pending or resident (or `max_blocks` safety-stops).
+
+        With a checkpoint manager, the loop runs as
+        `run_with_restarts` steps — a failure (anything `fault_hook` or
+        the dispatch raises) rolls back to the newest committed
+        checkpoint and replays; determinism makes the replay
+        bit-identical, so restarts are invisible in the results."""
+        if self.idle():
+            return self
+        if self._manager is None:
+            for _ in range(max_blocks):
+                if self.idle():
+                    break
+                self._scheduler_step(None, self._ckpt_step)
+            return self
+
+        # commit the live state before entering the restart policy, so a
+        # failure in the FIRST block of this run() cannot roll back past
+        # work from a previous run() on the same service (skipped when the
+        # directory is already at or past this clock — e.g. a fresh
+        # process resuming someone else's checkpoints)
+        from repro.ckpt.checkpoint import latest_step
+
+        latest = latest_step(self._manager.directory)
+        if latest is None or latest < self._ckpt_step:
+            self._live_snap = self._make_snapshot()
+            self._manager.maybe_save(self._live_snap, self._ckpt_step,
+                                     force=True)
+            self._manager.wait()
+
+        _, restarts = run_with_restarts(
+            lambda: self._live_snap if self._live_snap is not None
+            else self._make_snapshot(),
+            self._scheduler_step,
+            self._ckpt_step + max_blocks, self._manager,
+            max_restarts=max_restarts,
+            until=lambda _snap: self.idle())
+        self.stats["restarts"] += restarts
+        return self
+
+    def _scheduler_step(self, snap, i):
+        """One restart-policy step == one block boundary: (re)load state
+        if the policy rolled back, inject faults, admit, dispatch,
+        publish. Returns the committed-checkpoint payload."""
+        if snap is not None and snap is not self._live_snap:
+            self._load_snapshot(snap)  # restored after a failure
+        if self._fault_hook is not None:
+            self._fault_hook(i)
+        self._admit()
+        self._dispatch_and_publish()
+        self._ckpt_step = i + 1  # the restart policy's committed clock
+        self._live_snap = self._make_snapshot()
+        return self._live_snap
+
+    def _admit(self):
+        free = self.batch.free_slots
+        if not free or not self._pending:
+            return
+        chosen = pack_order(self._pending, len(free), self.strategy)
+        for slot, handle in zip(free, chosen):
+            self._pending.remove(handle)
+            if handle._saved is not None:  # preempted/repacked: resume
+                sub = jax.tree.map(jnp.asarray, handle._saved)
+                handle._saved = None
+            else:
+                sub = engine.init_tenant_slot(
+                    jax.random.PRNGKey(handle.spec.seed), self.pop_size,
+                    self.tree_spec)
+            self._state = splice_island(self._state, slot, sub)
+            self._gens[slot] = int(sub.gens_done)
+            self.batch.admit(slot, handle)
+            handle.status = RUNNING
+            self.heartbeats.beat(self._worker_id(handle))
+            self.stats["admissions"] += 1
+
+    def _dispatch_and_publish(self):
+        X, y, w, params = self.batch.operands()
+        with self.monitor:
+            self._state, hist = self._block(self._state, X, y, w, params)
+            # ONE host sync per block: counters, champions and the
+            # per-generation streams come back together
+            host, hist = jax.device_get((self._state, hist))
+        hist = np.asarray(hist)  # [K, I]
+        self.stats["blocks"] += 1
+        self.stats["block_s_ema"] = self.monitor.ema
+        self.stats["stragglers"] = self.monitor.stragglers
+        self.stats["compiles"] = self._compile_count()
+
+        budgets = np.asarray(params.budget)
+        stops = np.asarray(params.stop)
+        for slot, handle in self.batch.occupied:
+            ran = int(host.gens_done[slot]) - int(self._gens[slot])
+            self._gens[slot] = int(host.gens_done[slot])
+            handle.gens_done = int(host.gens_done[slot])
+            handle.best_fitness = float(host.best_fitness[slot])
+            handle.history.extend(float(b) for b in hist[:ran, slot])
+            self.heartbeats.beat(self._worker_id(handle))
+            finished = (handle.gens_done >= int(budgets[slot])
+                        or handle.best_fitness <= float(stops[slot]))
+            if finished or handle._cancel:
+                self._publish(slot, handle, host,
+                              DONE if finished else CANCELLED)
+
+    def _publish(self, slot: int, handle: JobHandle, host: TenantState,
+                 status: str):
+        handle.best_op = np.asarray(host.best_op[slot]).copy()
+        handle.best_arg = np.asarray(host.best_arg[slot]).copy()
+        if np.isfinite(handle.best_fitness):
+            handle.best_expression = to_string(
+                handle.best_op, handle.best_arg,
+                feature_names=handle.spec.feature_names,
+                const_table=np.asarray(self.tree_spec.const_table()))
+        handle.status = status
+        handle._cancel = False
+        self.batch.evict(slot)
+        # the slot's worker left on purpose — forget it, or dead_workers()
+        # would report every finished job forever
+        self.heartbeats.remove(self._worker_id(handle))
+        self.stats["evictions"] += 1
+
+    def _worker_id(self, handle: JobHandle) -> str:
+        return f"job-{handle.job_id}"
+
+    def _compile_count(self) -> int:
+        """How many programs the tenant block compiled — the service's
+        no-recompile guarantee pins this at 1 across every admission/
+        eviction. Falls back to the blocks counter's floor if the jax
+        version hides the cache."""
+        try:
+            return int(self._block._cache_size())
+        except AttributeError:
+            return 1 if self.stats["blocks"] else 0
+
+    # --- checkpoint payload ---------------------------------------------------
+
+    def _make_snapshot(self) -> dict:
+        """Committed-checkpoint payload: the device state (host-gathered),
+        the parameter table and the slot→job map. Data buffers are NOT
+        checkpointed — they are derivable from the JobSpecs, which the
+        submitting process re-provides (`submit` is the durable log)."""
+        slot_ids = np.full((self.slots,), -1, np.int64)
+        for i, h in self.batch.occupied:
+            slot_ids[i] = h.job_id
+        return {"state": jax.tree.map(np.asarray, jax.device_get(self._state)),
+                "params": self.batch.params_host(),
+                "slot_ids": slot_ids}
+
+    def _load_snapshot(self, snap: dict):
+        """Roll the whole service back to a committed checkpoint: device
+        state, parameter table, slot map, and every affected handle's
+        host mirror (status, counters, history truncation). Jobs that
+        finished AFTER the checkpoint return to their slots and re-run
+        their tail — determinism republishes identical results."""
+        self._state = jax.tree.map(jnp.asarray, snap["state"])
+        self.batch.restore_params(snap["params"])
+        gens = np.asarray(snap["state"].gens_done)
+        best = np.asarray(snap["state"].best_fitness)
+        slot_ids = np.asarray(snap["slot_ids"])
+        self.batch.slots = [None] * self.slots
+        slotted = set()
+        for i, jid in enumerate(slot_ids):
+            if jid < 0:
+                continue
+            handle = self._jobs[int(jid)]
+            slotted.add(int(jid))
+            self.batch.slots[i] = handle
+            handle._slot = i
+            handle._saved = None
+            handle.status = RUNNING
+            handle.gens_done = int(gens[i])
+            handle.best_fitness = float(best[i])
+            handle.history = handle.history[:int(gens[i])]
+            # rebuild the slot's data row from the spec (not checkpointed)
+            from repro.service.packer import slot_buffers
+
+            X, yb, wb = slot_buffers(handle.spec, self.batch.n_features,
+                                     self.batch.data_cap)
+            self.batch._X[i], self.batch._y[i], self.batch._w[i] = X, yb, wb
+        self.batch._dirty = True
+        # everything not finished and not resident goes back to the queue
+        self._pending = [h for jid, h in sorted(self._jobs.items())
+                         if jid not in slotted and not h.finished
+                         and h.status != CANCELLED]
+        for h in self._pending:
+            h.status = PENDING
+            h._slot = None
+        self._gens = gens.astype(np.int64).copy()
+        self._live_snap = snap
+
+    def adopt(self, snap: dict) -> "GPService":
+        """Repack a checkpoint taken at a DIFFERENT slot count onto this
+        service (elastic resume): every occupied slot's island sub-state
+        is lifted out (`take_island`) and parked on its job's handle;
+        the normal admission path splices it into whatever slot this
+        layout has free. Requires the jobs to have been re-submitted
+        (ids must match) and the static tree/population shape to agree;
+        slot positions don't matter — every slot-varying value is an
+        operand."""
+        state = snap["state"]
+        if state.op.shape[1:] != (self.pop_size, self.tree_spec.num_nodes):
+            raise ValueError(
+                f"checkpoint population shape {state.op.shape[1:]} does not "
+                f"match this service's ({self.pop_size}, "
+                f"{self.tree_spec.num_nodes}) — elastic resume only varies "
+                f"the slot count")
+        for i, jid in enumerate(np.asarray(snap["slot_ids"])):
+            if jid < 0:
+                continue
+            handle = self._jobs[int(jid)]
+            handle._saved = jax.tree.map(np.asarray, take_island(state, i))
+            handle.gens_done = int(np.asarray(state.gens_done)[i])
+            handle.history = handle.history[:handle.gens_done]
+            handle.best_fitness = float(np.asarray(state.best_fitness)[i])
+            if handle not in self._pending:
+                self._pending.append(handle)
+            handle.status = PENDING
+            handle._slot = None
+        self._pending.sort(key=lambda h: h.job_id)
+        return self
+
+
+def run_jobs(specs: list[JobSpec], **service_kw) -> list[JobHandle]:
+    """Convenience one-shot: submit every spec, drain, return handles in
+    submit order (the launch CLI and benchmarks ride this)."""
+    svc = GPService(**service_kw)
+    handles = [svc.submit(s) for s in specs]
+    svc.run()
+    return handles

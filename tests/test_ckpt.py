@@ -113,3 +113,65 @@ def test_elastic_reshard_subprocess():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "ELASTIC_OK" in r.stdout
+
+
+_ELASTIC_GP = textwrap.dedent("""
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
+    from repro.core import engine
+    from repro.ckpt.checkpoint import save, restore
+    from repro.ckpt.elastic import reshard_gp_state
+    from repro.gp import GPSession, MeshTopology
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.RandomState(3)
+    X_rows = np.abs(rng.randn(128, 2)).astype(np.float32) + 0.5
+    y = (X_rows[:, 0] ** 2 / X_rows[:, 1]).astype(np.float32)
+
+    # islands=4 run on a (data=2, model=2, pod=2) mesh, a few generations in
+    s = GPSession(pop_size=16, generations=4, kernel="r", islands=4,
+                  migrate_every=100,  # no mid-run migration: pure evolution
+                  topology=MeshTopology(data=2, model=2, pod=2))
+    s.fit(X_rows, y)
+    cfg = s._cfg
+    host = jax.tree.map(np.asarray, jax.device_get(s.state))
+
+    with tempfile.TemporaryDirectory() as d:
+        save(host, d, 1)
+        back = restore(d, 1, like=host)
+        # restart on a DIFFERENT pod/model split (elastic GP scaling):
+        # 4 islands over pod=4, each population unsharded (model=1)
+        mesh_b = make_host_mesh(data=2, model=1, pod=4)
+        state_b = reshard_gp_state(back, cfg, mesh_b, pod_axis="pod")
+        for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(state_b)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the champion survived re-placement bit-for-bit
+        assert float(jnp.min(state_b.best_fitness)) == float(np.min(host.best_fitness))
+        # and the resharded state can actually take a step on the new mesh
+        step, specs = engine.sharded_evolve_step(cfg, mesh_b, pod_axis="pod")
+        from repro.data.loader import pad_feature_major
+        X_fm, yy, w = pad_feature_major(X_rows.T.copy(), y, 2)
+        Xd = jax.device_put(jnp.asarray(X_fm), NamedSharding(mesh_b, P(None, "data")))
+        yd = jax.device_put(jnp.asarray(yy), NamedSharding(mesh_b, P("data")))
+        wd = jax.device_put(jnp.asarray(w), NamedSharding(mesh_b, P("data")))
+        with compat.set_mesh(mesh_b):
+            state_b2 = jax.jit(step)(state_b, Xd, yd, wd)
+        assert int(jnp.max(state_b2.generation)) == int(np.max(host.generation)) + 1
+        assert float(jnp.min(state_b2.best_fitness)) <= float(np.min(host.best_fitness))
+    print("ELASTIC_GP_OK")
+""")
+
+
+def test_elastic_gp_reshard_subprocess():
+    """A GPState from an islands=4 run saved on a (2,2,2) mesh restores
+    and resharded onto a (2,1,4) mesh bit-identically — champion
+    included — and the new mesh can evolve it further."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _ELASTIC_GP], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ELASTIC_GP_OK" in r.stdout

@@ -66,3 +66,48 @@ def test_heartbeats():
     time.sleep(0.08)
     hb.beat("w1")
     assert hb.dead_workers() == ["w0"]
+
+
+def test_heartbeat_remove_forgets_worker():
+    """A deliberately departed worker (an evicted service job) must not
+    read as dead forever."""
+    hb = HeartbeatMonitor(deadline_s=0.05)
+    hb.beat("w0")
+    hb.beat("w1")
+    hb.remove("w0")
+    time.sleep(0.08)
+    hb.beat("w1")
+    assert hb.dead_workers() == []
+    hb.remove("never-seen")  # idempotent
+
+
+def test_restart_until_predicate_stops_early():
+    """`until=` ends the loop when the state satisfies the predicate —
+    the service's drain-the-queue termination."""
+    def step(state, i):
+        return {"x": state["x"] + 1.0}
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, every=1)
+        state, restarts = run_with_restarts(
+            lambda: {"x": jnp.zeros((), jnp.float32)}, step, 50, mgr,
+            until=lambda s: float(s["x"]) >= 3.0)
+    assert restarts == 0
+    assert float(state["x"]) == 3.0
+
+
+def test_session_block_monitor_stats():
+    """GPSession.evolve threads each block through a StepMonitor —
+    stats must expose the wall-time EMA and the straggler list."""
+    from repro.gp import GPSession
+
+    r = np.random.RandomState(0)
+    X = r.randn(16, 2).astype(np.float32)
+    y = (X[:, 0] * X[:, 1]).astype(np.float32)
+    sess = GPSession(pop_size=8, max_depth=3, kernel="r", generations=2,
+                     backend="jnp")
+    sess.fit(X, y)
+    assert sess.stats["blocks"] >= 1
+    assert sess.stats["block_s_ema"] is not None
+    assert sess.stats["block_s_ema"] > 0.0
+    assert isinstance(sess.stats["stragglers"], list)
