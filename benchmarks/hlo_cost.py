@@ -104,8 +104,14 @@ class Cost:
 
 
 class HloAnalyzer:
-    def __init__(self, text: str):
+    def __init__(self, text: str, *, unknown_trip: int = 1):
+        # `unknown_trip`: trip count charged to while loops that carry no
+        # known_trip_count and whose condition holds no literal bound —
+        # i.e. data-dependent loops (the postfix GP kernel's instruction
+        # loop bounds itself by the tile's max program length at runtime).
+        # Callers that know the true bound pass it here.
         self.computations = self._split(text)
+        self.unknown_trip = unknown_trip
         self._memo: dict[str, Cost] = {}
 
     @staticmethod
@@ -224,7 +230,7 @@ class HloAnalyzer:
                         consts = [int(c) for c in re.findall(
                             r"constant\((\d+)\)", "\n".join(
                                 self.computations.get(cond.group(1), [])))]
-                        trip = max(consts) if consts else 1
+                        trip = max(consts) if consts else self.unknown_trip
                 if body:
                     total += self.analyze_computation(body.group(1)).scaled(trip)
                 continue
@@ -273,17 +279,17 @@ class HloAnalyzer:
         return self.analyze_computation(last)
 
 
-def analyze_hlo_text(text: str) -> dict:
-    a = HloAnalyzer(text)
+def analyze_hlo_text(text: str, *, unknown_trip: int = 1) -> dict:
+    a = HloAnalyzer(text, unknown_trip=unknown_trip)
     c = a.entry_cost()
     return {"flops": c.flops, "bytes": c.bytes,
             "collectives": dict(c.collectives),
             "collective_bytes": c.collective_bytes}
 
 
-def analyze_file(path: str) -> dict:
+def analyze_file(path: str, *, unknown_trip: int = 1) -> dict:
     with open(path) as f:
-        return analyze_hlo_text(f.read())
+        return analyze_hlo_text(f.read(), unknown_trip=unknown_trip)
 
 
 if __name__ == "__main__":

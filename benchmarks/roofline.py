@@ -23,8 +23,10 @@ import json
 import os
 import sys
 
-sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.hlo_cost import analyze_file  # noqa: E402
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)
+sys.path.insert(0, os.path.join(_REPO, "src"))
+from benchmarks.hlo_cost import analyze_file, analyze_hlo_text  # noqa: E402
 
 PEAK_FLOPS = 197e12  # bf16 / chip (v5e)
 HBM_BW = 819e9  # bytes/s / chip
@@ -100,6 +102,92 @@ def analyze_cell(json_path: str) -> dict | None:
     return rec
 
 
+def gp_eval_cost(pop: int = 512, rows: int = 16384, max_depth: int = 5,
+                 n_features: int = 4, kernel: str = "r",
+                 out_path: str | None = "benchmarks/artifacts/gp_eval_cost.json"):
+    """Bytes/FLOPs of one full-population fitness evaluation — the eval
+    work of one generation — compiled live for both genome forms.
+
+    Lowers `kernels.ops.fitness` for the tree (level-sweep) and postfix
+    (stack-interpreter) kernels at the same (pop × rows × depth) point and
+    runs the trip-count-aware HLO cost model on each compiled module. The
+    postfix instruction loop is data-dependent (`jnp.max(lens)` per pop
+    tile), so its `while` carries no known_trip_count — we charge it at
+    the population's true max program length via `unknown_trip`, i.e. the
+    cost of the *longest* tile; length-sorted tiles of short programs exit
+    earlier, so the postfix bytes/FLOPs reported here are an upper bound.
+
+    "Useful" work is one primitive application per (active node × data
+    point): identical for both forms — they encode the same trees — which
+    is what makes useful_ratio the apples-to-apples dispatch-waste metric
+    (the tree kernel sweeps all N heap slots; postfix executes only live
+    instructions)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.fitness import FitnessSpec
+    from repro.core.trees import TreeSpec, generate_population, heap_to_postfix
+    from repro.kernels import ops as kops
+
+    spec_t = TreeSpec(max_depth=max_depth, n_features=n_features, n_consts=8)
+    spec_p = dataclasses.replace(spec_t, genome="postfix")
+    fs = FitnessSpec(kernel)
+    op_t, arg_t = generate_population(jax.random.PRNGKey(0), pop, spec_t)
+    op_p, arg_p = heap_to_postfix(op_t, arg_t)
+    X = jnp.zeros((n_features, rows), jnp.float32)
+    y = jnp.zeros((rows,), jnp.float32)
+    const = jnp.asarray(spec_t.const_table())
+    lens = (jnp.asarray(op_p) != 0).sum(-1)
+    active = int(lens.sum())          # total live primitives in the population
+    max_len = int(lens.max())         # true bound of the postfix fori_loop
+    useful = float(active) * rows     # one flop per (live node × data point)
+
+    cells = []
+    for tag, spec, o, a in (("tree", spec_t, op_t, arg_t),
+                            ("postfix", spec_p, op_p, arg_p)):
+        text = (kops.fitness.lower(o, a, X, y, const, tree_spec=spec,
+                                   fit_spec=fs).compile().as_text())
+        cost = analyze_hlo_text(text, unknown_trip=max_len)
+        cells.append({
+            "genome": tag, "pop": pop, "rows": rows, "max_depth": max_depth,
+            "n_nodes": int(o.shape[1]), "fitness_kernel": kernel,
+            "max_program_len": max_len,
+            "hlo_flops": cost["flops"], "hlo_bytes": cost["bytes"],
+            "intensity_flops_per_byte": (cost["flops"] / cost["bytes"]
+                                         if cost["bytes"] else 0.0),
+            "model_flops": useful,
+            "useful_ratio": (useful / cost["flops"]) if cost["flops"] else 0.0,
+        })
+    t, p = cells
+    summary = {
+        "postfix_over_tree_flops": (p["hlo_flops"] / t["hlo_flops"]
+                                    if t["hlo_flops"] else 0.0),
+        "postfix_over_tree_bytes": (p["hlo_bytes"] / t["hlo_bytes"]
+                                    if t["hlo_bytes"] else 0.0),
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"cells": cells, **summary}, f, indent=1)
+    return cells, summary
+
+
+def fmt_gp_table(cells, summary) -> str:
+    head = (f"{'genome':8s} {'pop':>6s} {'rows':>7s} {'GFLOPs':>9s} "
+            f"{'GBytes':>9s} {'flops/B':>8s} {'useful':>7s}")
+    lines = [head, "-" * len(head)]
+    for c in cells:
+        lines.append(
+            f"{c['genome']:8s} {c['pop']:6d} {c['rows']:7d} "
+            f"{c['hlo_flops']/1e9:9.3f} {c['hlo_bytes']/1e9:9.3f} "
+            f"{c['intensity_flops_per_byte']:8.3f} {c['useful_ratio']:7.3f}")
+    lines.append(f"postfix/tree  flops ×{summary['postfix_over_tree_flops']:.3f}"
+                 f"  bytes ×{summary['postfix_over_tree_bytes']:.3f}")
+    return "\n".join(lines)
+
+
 def build_table(art_dir: str = "benchmarks/artifacts/dryrun",
                 out_path: str = "benchmarks/artifacts/roofline.json"):
     rows = []
@@ -130,5 +218,14 @@ def fmt_table(rows) -> str:
 
 
 if __name__ == "__main__":
-    rows = build_table(*(sys.argv[1:] or []))
-    print(fmt_table(rows))
+    if len(sys.argv) > 1 and sys.argv[1] == "gp-eval":
+        kv = dict(tok.split("=", 1) for tok in sys.argv[2:])
+        cells, summary = gp_eval_cost(
+            pop=int(kv.get("pop", 512)), rows=int(kv.get("rows", 16384)),
+            max_depth=int(kv.get("max_depth", 5)),
+            n_features=int(kv.get("n_features", 4)),
+            kernel=kv.get("kernel", "r"))
+        print(fmt_gp_table(cells, summary))
+    else:
+        rows = build_table(*(sys.argv[1:] or []))
+        print(fmt_table(rows))

@@ -80,6 +80,7 @@ def bench_loop(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
         "cold_s": round(compile_and_run_s, 4),
         "generations_per_sec": round(gens / run_s, 4),
         "rows_evals_per_sec": round(gens * pop * rows / run_s, 1),
+        "trees_rows_per_sec": round(gens * pop * rows / run_s, 1),
         "jax": jax.__version__,
         "device": jax.devices()[0].platform,
         "machine": platform.machine(),
@@ -207,8 +208,78 @@ def bench_service(*, pop: int = 64, rows: int = 96, gens: int = GENS,
     }
 
 
+def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
+               **_ignored) -> dict:
+    """Tree vs postfix fused-kernel throughput at several P×N×D points.
+
+    The SAME ramped population is scored through the heap level-sweep
+    kernel and — converted with `trees.heap_to_postfix` — the postfix
+    stack kernel, so the trees·rows/sec ratio isolates the genome
+    representation (identical semantics, pinned bitwise by tests). Each
+    point reports both kernels' best-of-several warm runs interleaved
+    (robust to background load); `postfix_speedup_headline` is the
+    P>=512, depth-5 (N=63) point the perf trajectory tracks."""
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.fitness import FitnessSpec
+    from repro.core.trees import TreeSpec, generate_population, heap_to_postfix
+    from repro.kernels import ops as kops
+
+    points = ((128, 4, 8_192), (512, 5, 16_384), (1024, 5, 32_768))
+    rounds = max(3, min(7, gens))
+    fit_spec = FitnessSpec(kernel="r")
+    cells = []
+    headline = None
+    for pop, depth, rows in points:
+        spec_t = TreeSpec(max_depth=depth, n_features=4, n_consts=8)
+        spec_p = dataclasses.replace(spec_t, genome="postfix")
+        op_t, arg_t = generate_population(jax.random.PRNGKey(seed), pop, spec_t)
+        op_p, arg_p = heap_to_postfix(op_t, arg_t)
+        r = np.random.RandomState(seed)
+        X = jax.numpy.asarray(r.randn(4, rows).astype(np.float32))
+        y = jax.numpy.asarray(r.randn(rows).astype(np.float32))
+        const = spec_t.const_table()
+        runs = {
+            "tree": jax.jit(lambda s=spec_t, o=op_t, a=arg_t: kops.fitness(
+                o, a, X, y, const, s, fit_spec, impl=impl)),
+            "postfix": jax.jit(lambda s=spec_p, o=op_p, a=arg_p: kops.fitness(
+                o, a, X, y, const, s, fit_spec, impl=impl)),
+        }
+        cell = {"pop": pop, "depth": depth, "nodes": spec_t.num_nodes,
+                "rows": rows}
+        best = {}
+        for tag, f in runs.items():
+            jax.block_until_ready(f())  # compile
+            best[tag] = float("inf")
+        for _ in range(rounds):  # interleaved: background load hits both
+            for tag, f in runs.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(f())
+                best[tag] = min(best[tag], time.perf_counter() - t0)
+        for tag, dt in best.items():
+            cell[f"{tag}_s"] = round(dt, 5)
+            cell[f"{tag}_trees_rows_per_sec"] = round(pop * rows / dt, 1)
+        cell["postfix_speedup"] = round(best["tree"] / best["postfix"], 3)
+        cells.append(cell)
+        if headline is None and pop >= 512 and spec_t.num_nodes >= 63:
+            headline = cell["postfix_speedup"]
+    return {
+        "bench": "eval",
+        "backend": impl,
+        "kernel": "r",
+        "rounds": rounds,
+        "points": cells,
+        "postfix_speedup_headline": headline,
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }
+
+
 BENCHES = {"loop": bench_loop, "islands": bench_islands,
-           "service": bench_service}
+           "service": bench_service, "eval": bench_eval}
 
 
 def main():

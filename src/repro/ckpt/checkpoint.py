@@ -84,6 +84,13 @@ def restore(directory: str, step: int, like=None, *, verify: bool = True):
         leaves.append(arr)
     if like is not None:
         treedef = jax.tree_util.tree_structure(like)
+        if treedef.num_leaves != len(leaves):
+            raise ValueError(
+                f"checkpoint at {path} has {len(leaves)} leaves but the "
+                f"restore target expects {treedef.num_leaves} — the state "
+                f"format changed between writer and reader (e.g. a "
+                f"pre-elite-cache GPState); restore with like=None and "
+                f"migrate the leaves, or re-initialize")
         return jax.tree_util.tree_unflatten(treedef, leaves)
     return leaves, manifest
 

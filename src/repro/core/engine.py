@@ -65,6 +65,7 @@ class GPConfig:
     stop_fitness: float | None = None  # early termination threshold (run())
     eval_impl: str = "jnp"  # any jittable name in repro.gp.backends
     data_tile: int = 1024  # pallas data-tile (lane-dim multiple of 128)
+    elite_cache: bool = True  # skip re-evaluating unchanged elites
     island: IslandConfig = IslandConfig()  # population layout + migration
     migrate_every: int = 10  # legacy alias for island.migrate_every
     migrate_k: int = 4  # legacy alias for island.migrate_k
@@ -87,7 +88,21 @@ class GPConfig:
         return hash((self.name, self.pop_size, self.tree_spec, self.fitness, self.mix,
                      self.tourn_size, self.generations, self.elitism, self.parsimony,
                      self.stop_fitness, self.eval_impl,
-                     self.data_tile, self.island))
+                     self.data_tile, self.elite_cache, self.island))
+
+
+def cache_width(cfg: GPConfig) -> int:
+    """E: rows of the cross-generation elite fitness cache carried in
+    GPState. Elitism copies the E = cfg.elitism best rows into slots
+    [:E] of the next population verbatim, so their fitness is already
+    known — the step bodies skip re-evaluating them when the cached
+    genomes match exactly (bitwise-identical by construction: the cached
+    value IS last generation's evaluation of the same rows, and every
+    eval path is row-independent). 0 disables (elite_cache off, no
+    elitism, or degenerate all-elite populations)."""
+    if cfg.elite_cache and 0 < cfg.elitism < cfg.pop_size:
+        return cfg.elitism
+    return 0
 
 
 class GPState(NamedTuple):
@@ -104,7 +119,16 @@ class GPState(NamedTuple):
         best_op/arg   int32[N]          int32[I, N]    (per-island champion)
         best_fitness  f32[]             f32[I]
         generation    int32[]           int32[]
-    """
+        cache_op/arg  int32[E, N]       int32[I, E, N]  (elite fitness cache)
+        cache_fit     f32[E]            f32[I, E]
+
+    The cache rows (E = `cache_width(cfg)`; 0 disables) are last
+    generation's parsimony-best genomes with their RAW fitness: elitism
+    places the same rows at [:E] of the next population, so the step
+    bodies compare genomes exactly and skip the elite re-evaluation on a
+    match. A zero-initialized cache never matches a well-formed genome
+    (slot 0 is never EMPTY in either form), so the first generation
+    always evaluates fully."""
 
     key: jax.Array
     op: jax.Array  # int32[P, N]
@@ -114,6 +138,9 @@ class GPState(NamedTuple):
     best_arg: jax.Array  # int32[N]
     best_fitness: jax.Array  # float32[]
     generation: jax.Array  # int32[]
+    cache_op: jax.Array  # int32[E, N]
+    cache_arg: jax.Array  # int32[E, N]
+    cache_fit: jax.Array  # float32[E]
 
 
 def _eval_fitness(cfg: GPConfig, op, arg, X, y, weight, const_table):
@@ -168,6 +195,7 @@ def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
         return generate_population(kk, cfg.pop_size, cfg.tree_spec)
 
     N = cfg.tree_spec.num_nodes
+    E = cache_width(cfg)
     if I == 1:
         op, arg = one_island(k1)
         return GPState(
@@ -176,6 +204,9 @@ def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
             best_op=jnp.zeros((N,), jnp.int32), best_arg=jnp.zeros((N,), jnp.int32),
             best_fitness=jnp.asarray(jnp.inf, jnp.float32),
             generation=jnp.asarray(0, jnp.int32),
+            cache_op=jnp.zeros((E, N), jnp.int32),
+            cache_arg=jnp.zeros((E, N), jnp.int32),
+            cache_fit=jnp.full((E,), jnp.inf, jnp.float32),
         )
     if cfg.island.migrate_k > cfg.pop_size:
         raise ValueError(f"migrate_k {cfg.island.migrate_k} exceeds the "
@@ -191,7 +222,46 @@ def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
         best_arg=jnp.zeros((I, N), jnp.int32),
         best_fitness=jnp.full((I,), jnp.inf, jnp.float32),
         generation=jnp.asarray(0, jnp.int32),
+        cache_op=jnp.zeros((I, E, N), jnp.int32),
+        cache_arg=jnp.zeros((I, E, N), jnp.int32),
+        cache_fit=jnp.full((I, E), jnp.inf, jnp.float32),
     )
+
+
+def _cached_fitness(state: GPState, eval_rows):
+    """Evaluate `state`'s population, serving rows [:E] from the elite
+    fitness cache when the cached genomes match exactly.
+
+    `eval_rows(op, arg) -> f32[rows]` evaluates any row slice. E comes
+    from the state's own cache shape, so the step body needs no extra
+    static plumbing. Every eval path is row-independent, so splitting
+    the population at E (and skipping the head on a hit — the cached
+    value IS last generation's evaluation of the identical rows) is
+    bitwise-identical to one full evaluation."""
+    E = state.cache_op.shape[0]
+    if not E:
+        return eval_rows(state.op, state.arg)
+    hit = (jnp.all(state.op[:E] == state.cache_op)
+           & jnp.all(state.arg[:E] == state.cache_arg))
+    tail = eval_rows(state.op[E:], state.arg[E:])
+    head = jax.lax.cond(
+        hit, lambda: state.cache_fit,
+        lambda: eval_rows(state.op[:E], state.arg[:E]))
+    return jnp.concatenate([head, tail])
+
+
+def _new_cache(state: GPState, fitness, sel_fitness, E: int):
+    """(cache_op, cache_arg, cache_fit) for the NEXT generation: the rows
+    elitism will copy to [:E] — argsort on the selection fitness, exactly
+    `next_generation`'s elite pick — paired with their RAW fitness. Rows
+    are taken from the EVALUATED population (`state.op`), never from the
+    bred output, so a migrant landing in [:E] can only MISS (re-evaluate),
+    never match a stale fitness. Works per-island on [..., P] inputs."""
+    best = jnp.argsort(sel_fitness, axis=-1)[..., :E]
+    cache_op = jnp.take_along_axis(state.op, best[..., None], axis=-2)
+    cache_arg = jnp.take_along_axis(state.arg, best[..., None], axis=-2)
+    cache_fit = jnp.take_along_axis(fitness, best, axis=-1)
+    return cache_op, cache_arg, cache_fit
 
 
 def _step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
@@ -199,7 +269,8 @@ def _step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
     (`evolve_step`) and the scanned block (`evolve_block`), so K scanned
     steps are bitwise-identical to K dispatched steps."""
     const_table = cfg.tree_spec.const_table()
-    fitness = _eval_fitness(cfg, state.op, state.arg, X, y, weight, const_table)
+    fitness = _cached_fitness(
+        state, lambda o, a: _eval_fitness(cfg, o, a, X, y, weight, const_table))
     # best tracked on RAW fitness; selection may add parsimony pressure
     i = jnp.argmin(fitness)
     improved = fitness[i] < state.best_fitness
@@ -213,12 +284,17 @@ def _step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
 
         sel_fitness = fitness + cfg.parsimony * tree_sizes(state.op).astype(jnp.float32)
 
+    E = state.cache_op.shape[0]
+    cache_op, cache_arg, cache_fit = (
+        _new_cache(state, fitness, sel_fitness, E) if E
+        else (state.cache_op, state.cache_arg, state.cache_fit))
+
     key, k_next = jax.random.split(state.key)
     new_op, new_arg = ev.next_generation(
         k_next, state.op, state.arg, sel_fitness, cfg.tree_spec, cfg.mix,
         cfg.tourn_size, cfg.elitism)
     return GPState(key, new_op, new_arg, fitness, best_op, best_arg, best_fit,
-                   state.generation + 1)
+                   state.generation + 1, cache_op, cache_arg, cache_fit)
 
 
 def _island_tables(cfg: GPConfig):
@@ -244,9 +320,27 @@ def _island_step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
     icfg = cfg.island
     I, P, N = state.op.shape
     const_table = cfg.tree_spec.const_table()
-    fitness = _eval_fitness(cfg, state.op.reshape(I * P, N),
-                            state.arg.reshape(I * P, N), X, y, weight,
-                            const_table).reshape(I, P)
+
+    def eval_rows(o, a):  # [I, R, N] -> [I, R], flattened into ONE backend call
+        R = o.shape[1]
+        return _eval_fitness(cfg, o.reshape(I * R, N), a.reshape(I * R, N),
+                             X, y, weight, const_table).reshape(I, R)
+
+    E = state.cache_op.shape[1]
+    if E:
+        # one hit predicate for ALL islands: a per-island cond would lower
+        # to a select that evaluates both branches anyway. From gen 2 every
+        # island hits every generation (migration only writes the last
+        # migrate_k slots), so the all-or-nothing gate costs nothing.
+        hit = (jnp.all(state.op[:, :E] == state.cache_op)
+               & jnp.all(state.arg[:, :E] == state.cache_arg))
+        tail = eval_rows(state.op[:, E:], state.arg[:, E:])
+        head = jax.lax.cond(
+            hit, lambda: state.cache_fit,
+            lambda: eval_rows(state.op[:, :E], state.arg[:, :E]))
+        fitness = jnp.concatenate([head, tail], axis=1)
+    else:
+        fitness = eval_rows(state.op, state.arg)
 
     # per-island champion tracking on RAW fitness
     i_best = jnp.argmin(fitness, axis=1)  # [I]
@@ -266,6 +360,10 @@ def _island_step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
         sizes = tree_sizes(state.op.reshape(I * P, N)).reshape(I, P)
         sel_fitness = fitness + cfg.parsimony * sizes.astype(jnp.float32)
 
+    cache_op, cache_arg, cache_fit = (
+        _new_cache(state, fitness, sel_fitness, E) if E
+        else (state.cache_op, state.cache_arg, state.cache_fit))
+
     probs, tourn_max, tourn, p_point = _island_tables(cfg)
     breed = ev.make_island_breeder(cfg.tree_spec, tourn_max, cfg.elitism)
     keys, new_op, new_arg = jax.vmap(breed)(
@@ -278,7 +376,7 @@ def _island_step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
         new_op, new_arg = isl.migrate_local(icfg, new_op, new_arg, e_op, e_arg,
                                             state.generation, cand_fit)
     return GPState(keys, new_op, new_arg, fitness, best_op, best_arg, best_fit,
-                   state.generation + 1)
+                   state.generation + 1, cache_op, cache_arg, cache_fit)
 
 
 def _step_body_any(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
@@ -419,6 +517,8 @@ class TenantState(NamedTuple):
         best_op/arg   int32[I, N]
         best_fitness  f32[I]
         gens_done     int32[I]
+        cache_op/arg  int32[I, E, N]  per-slot elite fitness cache
+        cache_fit     f32[I, E]       (same contract as GPState's)
     """
 
     key: jax.Array
@@ -429,6 +529,9 @@ class TenantState(NamedTuple):
     best_arg: jax.Array
     best_fitness: jax.Array
     gens_done: jax.Array
+    cache_op: jax.Array
+    cache_arg: jax.Array
+    cache_fit: jax.Array
 
 
 def tenant_active(state: TenantState, params: TenantParams):
@@ -439,28 +542,43 @@ def tenant_active(state: TenantState, params: TenantParams):
         state.best_fitness <= params.stop)
 
 
-def init_tenant_slot(key, pop_size: int, spec: TreeSpec) -> TenantState:
+def _tenant_cache_width(elitism: int, pop_size: int, elite_cache: bool) -> int:
+    """cache_width for the tenant batch (elitism is the block's shared
+    static; the same guard as the session engine's)."""
+    return elitism if (elite_cache and 0 < elitism < pop_size) else 0
+
+
+def init_tenant_slot(key, pop_size: int, spec: TreeSpec, elitism: int = 1,
+                     elite_cache: bool = True) -> TenantState:
     """ONE job's fresh sub-state (un-batched leaves, ready for
     `islands.splice_island`). Keyed exactly like `init_state` with
     islands == 1 — split once, population from the second half, slot key
     from the first — so a packed job replays a solo session's PRNG
-    stream bit-for-bit."""
+    stream bit-for-bit. `elitism`/`elite_cache` size the slot's elite
+    fitness cache and must match the block's."""
     k0, k1 = jax.random.split(key)
     op, arg = generate_population(k1, pop_size, spec)
     N = spec.num_nodes
+    E = _tenant_cache_width(elitism, pop_size, elite_cache)
     return TenantState(
         key=k0, op=op, arg=arg,
         fitness=jnp.full((pop_size,), jnp.inf, jnp.float32),
         best_op=jnp.zeros((N,), jnp.int32), best_arg=jnp.zeros((N,), jnp.int32),
         best_fitness=jnp.asarray(jnp.inf, jnp.float32),
         gens_done=jnp.asarray(0, jnp.int32),
+        cache_op=jnp.zeros((E, N), jnp.int32),
+        cache_arg=jnp.zeros((E, N), jnp.int32),
+        cache_fit=jnp.full((E,), jnp.inf, jnp.float32),
     )
 
 
-def empty_tenant_state(islands: int, pop_size: int, spec: TreeSpec) -> TenantState:
+def empty_tenant_state(islands: int, pop_size: int, spec: TreeSpec,
+                       elitism: int = 1,
+                       elite_cache: bool = True) -> TenantState:
     """An all-empty batch (pair with budget-0 TenantParams rows: empty
     slots never advance; their compute is frozen out)."""
     I, P, N = islands, pop_size, spec.num_nodes
+    E = _tenant_cache_width(elitism, pop_size, elite_cache)
     return TenantState(
         key=jnp.zeros((I, 2), jnp.uint32),
         op=jnp.zeros((I, P, N), jnp.int32), arg=jnp.zeros((I, P, N), jnp.int32),
@@ -468,6 +586,9 @@ def empty_tenant_state(islands: int, pop_size: int, spec: TreeSpec) -> TenantSta
         best_op=jnp.zeros((I, N), jnp.int32), best_arg=jnp.zeros((I, N), jnp.int32),
         best_fitness=jnp.full((I,), jnp.inf, jnp.float32),
         gens_done=jnp.zeros((I,), jnp.int32),
+        cache_op=jnp.zeros((I, E, N), jnp.int32),
+        cache_arg=jnp.zeros((I, E, N), jnp.int32),
+        cache_fit=jnp.full((I, E), jnp.inf, jnp.float32),
     )
 
 
@@ -503,20 +624,44 @@ def _tenant_slot_step(spec: TreeSpec, kernels: tuple, tourn_draw: int,
 
     active = tenant_active(sub, p)
     const_table = spec.const_table()
-    preds = evaluate_population(sub.op, sub.arg, Xi, const_table, spec)
-    fitness = _switch_fitness(kernels, preds, yi, wi, p.kernel_id,
-                              p.n_classes, p.precision)
+
+    def eval_rows(o, a):  # f32[rows]; row-independent, so slicing is exact
+        preds = evaluate_population(o, a, Xi, const_table, spec)
+        return _switch_fitness(kernels, preds, yi, wi, p.kernel_id,
+                               p.n_classes, p.precision)
+
+    E = sub.cache_op.shape[0]
+    if E:
+        hit = (jnp.all(sub.op[:E] == sub.cache_op)
+               & jnp.all(sub.arg[:E] == sub.cache_arg))
+        tail = eval_rows(sub.op[E:], sub.arg[E:])
+        head = jax.lax.cond(hit, lambda: sub.cache_fit,
+                            lambda: eval_rows(sub.op[:E], sub.arg[:E]))
+        fitness = jnp.concatenate([head, tail])
+    else:
+        fitness = eval_rows(sub.op, sub.arg)
     i = jnp.argmin(fitness)
     improved = fitness[i] < sub.best_fitness
     best_op = jnp.where(improved, sub.op[i], sub.best_op)
     best_arg = jnp.where(improved, sub.arg[i], sub.best_arg)
     best_fit = jnp.minimum(fitness[i], sub.best_fitness)
 
+    if E:
+        # the tenant breeder selects elites on RAW fitness, so the next
+        # cache is argsort(fitness)[:E] of the evaluated population
+        best = jnp.argsort(fitness)[:E]
+        cache_op, cache_arg = sub.op[best], sub.arg[best]
+        cache_fit = fitness[best]
+    else:
+        cache_op, cache_arg, cache_fit = (sub.cache_op, sub.cache_arg,
+                                          sub.cache_fit)
+
     breed = ev.make_island_breeder(spec, tourn_draw, elitism)
     key, new_op, new_arg = breed(sub.key, sub.op, sub.arg, fitness,
                                  p.probs, p.tourn, p.point_rate)
     nxt = TenantState(key, new_op, new_arg, fitness, best_op, best_arg,
-                      best_fit, sub.gens_done + 1)
+                      best_fit, sub.gens_done + 1, cache_op, cache_arg,
+                      cache_fit)
     return jax.tree.map(lambda prev, new: jnp.where(active, new, prev), sub, nxt)
 
 
@@ -637,6 +782,10 @@ def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
     state_specs = GPState(
         key=P(), op=pop_spec, arg=pop_spec, fitness=pop_spec,
         best_op=P(), best_arg=P(), best_fitness=P(), generation=P(),
+        # the elite cache is host/single-device machinery: mesh steps carry
+        # it through replicated and untouched (they re-seed elites via the
+        # rank-0 champion row, not the [:E] convention the cache keys on)
+        cache_op=P(), cache_arg=P(), cache_fit=P(),
     )
 
     n_data = mesh.shape[data_axis]
@@ -694,7 +843,8 @@ def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
                 cfg, new_op, new_arg, op_g[order], arg_g[order],
                 state.generation, pod_axis, is_receiver=rank == n_model - 1)
         return GPState(state.key, new_op, new_arg, fitness_local, best_op, best_arg,
-                       best_fit, state.generation + 1)
+                       best_fit, state.generation + 1,
+                       state.cache_op, state.cache_arg, state.cache_fit)
 
     return step, state_specs, data_spec, y_spec, w_spec
 
@@ -747,6 +897,9 @@ def _sharded_island_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
         fitness=P(pod, model_axis),
         best_op=P(pod, None), best_arg=P(pod, None),
         best_fitness=P(pod), generation=P(),
+        # cache rides the island (pod) axis, untouched by the mesh step
+        cache_op=P(pod, None, None), cache_arg=P(pod, None, None),
+        cache_fit=P(pod, None),
     )
     probs_t, tourn_max, tourn_t, pp_t = _island_tables(cfg)
 
@@ -810,7 +963,8 @@ def _sharded_island_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
                 icfg, new_op, new_arg, e_op, e_arg, state.generation,
                 cand_fit, pod, is_receiver=rank == n_model - 1)
         return GPState(keys, new_op, new_arg, fitness_local, best_op, best_arg,
-                       best_fit, state.generation + 1)
+                       best_fit, state.generation + 1,
+                       state.cache_op, state.cache_arg, state.cache_fit)
 
     return step, state_specs, data_spec, y_spec, w_spec
 

@@ -36,11 +36,19 @@ from repro.core.trees import TreeSpec
 def evaluate_population(op, arg, X, const_table, spec: TreeSpec):
     """Evaluate every tree against every data point.
 
-    op, arg:     int32[P, N]        heap population
+    op, arg:     int32[P, N]        population in the spec's genome form
     X:           float[F, D]        feature-major data (the paper's Eq. 2 layout)
     const_table: float[C]
     returns      float32[P, D]      predictions
+
+    Dispatches on spec.genome: heap populations run the level sweep
+    below; postfix populations run the stack machine
+    (`evaluate_population_postfix`). Both apply the same f32 primitives
+    to the same operand values in the same order per node, so the two
+    forms of one tree produce bitwise-identical predictions.
     """
+    if spec.genome == "postfix":
+        return evaluate_population_postfix(op, arg, X, const_table, spec)
     P, N = op.shape
     D = X.shape[1]
     max_depth = (N + 1).bit_length() - 2
@@ -62,6 +70,52 @@ def evaluate_population(op, arg, X, const_table, spec: TreeSpec):
         node = jnp.where(opd == prim.EMPTY, 0.0, node)
         vals = node
     return vals[:, 0]  # [P, D]
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def evaluate_population_postfix(op, arg, X, const_table, spec: TreeSpec):
+    """Stack-machine evaluation of postfix populations — the jnp
+    reference for the Pallas stack kernel (kernels/gp_eval.py).
+
+    One `lax.scan` over all NODES instruction slots carries an operand
+    stack f32[P, stack_size, D] (slot 0 = top): terminals shift-push
+    their value, unary functions replace the top, binary functions fold
+    the top two and shift up; EMPTY slots hold the stack unchanged, so
+    rows of different active lengths share the fixed-trip scan. Applies
+    the identical f32 primitives (`prim.apply_function`) to the same
+    operand values as the heap level sweep — bitwise-equal predictions
+    for the two forms of one tree.
+    """
+    P, N = op.shape
+    D = X.shape[1]
+    S = spec.stack_size
+    X = X.astype(jnp.float32)
+    const_table = const_table.astype(jnp.float32)
+    ARITY = jnp.asarray(prim.ARITY)
+
+    def step(stack, xs):
+        opt, argt = xs  # int32[P]
+        feat = X[jnp.clip(argt, 0, X.shape[0] - 1)]  # [P, D]
+        cons = const_table[jnp.clip(argt, 0, const_table.shape[0] - 1)][:, None]
+        tval = jnp.where((opt == prim.FEATURE)[:, None], feat,
+                         jnp.broadcast_to(cons, (P, D)))
+        top = stack[:, 0]
+        ar = ARITY[opt]
+        lhs = jnp.where((ar == 2)[:, None], stack[:, 1], top)
+        fnv = prim.apply_function(opt[:, None], lhs, top, spec.fn_set)
+        push = jnp.concatenate([tval[:, None], stack[:, :S - 1]], axis=1)
+        una = stack.at[:, 0].set(fnv)
+        binr = jnp.concatenate(
+            [fnv[:, None], stack[:, 2:], jnp.zeros((P, 1, D), jnp.float32)],
+            axis=1)
+        a = ar[:, None, None]
+        new = jnp.where(a == 0, push, jnp.where(a == 1, una, binr))
+        new = jnp.where((opt == prim.EMPTY)[:, None, None], stack, new)
+        return new, None
+
+    stack0 = jnp.zeros((P, S, D), jnp.float32)
+    stack, _ = jax.lax.scan(step, stack0, (op.T, arg.T))
+    return stack[:, 0]  # [P, D]; all-EMPTY rows stay 0.0 like the heap path
 
 
 def evaluate_tree(op_row, arg_row, X, const_table, spec: TreeSpec):

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import primitives as prim
-from repro.core.trees import TreeSpec, depth_table, generate_population
+from repro.core.trees import (TreeSpec, depth_table, generate_population,
+                              subtree_spans, tree_sizes)
 
 
 # --- random node choice ------------------------------------------------------
@@ -69,6 +70,78 @@ def _transplant(op_t, arg_t, op_s, arg_s, a, b, spec: TreeSpec):
 
 
 _transplant_pop = jax.vmap(_transplant, in_axes=(0, 0, 0, 0, 0, 0, None))
+
+
+# --- postfix splicing (crossover + branch mutation on linear genomes) --------
+
+
+def _splice_row(op_a, arg_a, op_b, arg_b, sa, ea, sb, eb, spec: TreeSpec):
+    """Replace the subexpression [sa, ea] of postfix program A with the
+    subexpression [sb, eb] of program B — pure arange-mask splicing, the
+    payoff of the linear encoding (no heap path arithmetic, no subtree
+    depth repair).
+
+    Offspring that would exceed NODES or the operand-stack bound (P5) are
+    rejected: the row returns parent A unchanged (a valid, if boring, GP
+    operator outcome — mirrors Karoo retrying an oversize crossover).
+    Single row; vmapped as `_splice_pop`."""
+    N = spec.num_nodes
+    t = jnp.arange(N, dtype=jnp.int32)
+    len_a = jnp.sum(op_a != prim.EMPTY).astype(jnp.int32)
+    lb = eb - sb + 1
+    new_len = len_a - (ea - sa + 1) + lb
+    in_pre = t < sa
+    in_ins = (t >= sa) & (t < sa + lb)
+    in_tail = (t >= sa + lb) & (t < new_len)
+    idx_b = jnp.clip(sb + t - sa, 0, N - 1)
+    idx_tail = jnp.clip(t - lb + (ea - sa + 1), 0, N - 1)
+    cand_op = jnp.where(
+        in_pre, op_a,
+        jnp.where(in_ins, op_b[idx_b],
+                  jnp.where(in_tail, op_a[idx_tail], prim.EMPTY)))
+    cand_arg = jnp.where(
+        in_pre, arg_a,
+        jnp.where(in_ins, arg_b[idx_b],
+                  jnp.where(in_tail, arg_a[idx_tail], 0)))
+    # Both spans are whole subexpressions, so the splice stays stack-balanced;
+    # only the length and peak-depth bounds can break.
+    S = jnp.cumsum(1 - jnp.asarray(prim.ARITY)[cand_op])
+    peak = jnp.max(jnp.where(t < new_len, S, 0))
+    ok = (new_len <= N) & (peak <= spec.stack_size)
+    return (jnp.where(ok, cand_op, op_a), jnp.where(ok, cand_arg, arg_a))
+
+
+_splice_pop = jax.vmap(_splice_row, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))
+
+
+def _random_subexpr(key, op):
+    """(start, end) of a uniform random subexpression per postfix row.
+    Every active position ends exactly one subexpression, so a uniform
+    draw over active slots matches the heap path's uniform node pick."""
+    end = _random_active_node(key, op)
+    start = jnp.take_along_axis(subtree_spans(op), end[..., None], axis=-1)
+    return start[..., 0], end
+
+
+def crossover_postfix(key, op_a, arg_a, op_b, arg_b, spec: TreeSpec):
+    """Subtree crossover on linear genomes: splice a random subexpression
+    of B over a random subexpression of A."""
+    ka, kb = jax.random.split(key)
+    sa, ea = _random_subexpr(ka, op_a)
+    sb, eb = _random_subexpr(kb, op_b)
+    return _splice_pop(op_a, arg_a, op_b, arg_b, sa, ea, sb, eb, spec)
+
+
+def mutate_branch_postfix(key, op, arg, spec: TreeSpec):
+    """Branch mutation on linear genomes: splice a fresh random program
+    (its full stream: [0, len-1]) over a random subexpression."""
+    P = op.shape[0]
+    kp, kg = jax.random.split(key)
+    sa, ea = _random_subexpr(kp, op)
+    fresh_op, fresh_arg = generate_population(kg, P, spec)
+    sb = jnp.zeros((P,), jnp.int32)
+    eb = (tree_sizes(fresh_op) - 1).astype(jnp.int32)
+    return _splice_pop(op, arg, fresh_op, fresh_arg, sa, ea, sb, eb, spec)
 
 
 # --- operators ----------------------------------------------------------------
@@ -187,8 +260,13 @@ def next_generation_arrays(key, op, arg, fitness, spec: TreeSpec, probs,
     op_a, arg_a = op[parent_a], arg[parent_a]
     op_b, arg_b = op[parent_b], arg[parent_b]
 
-    op_x, arg_x = crossover(k_x, op_a, arg_a, op_b, arg_b, spec)
-    op_mb, arg_mb = mutate_branch(k_mb, op_a, arg_a, spec)
+    if spec.genome == "postfix":
+        op_x, arg_x = crossover_postfix(k_x, op_a, arg_a, op_b, arg_b, spec)
+        op_mb, arg_mb = mutate_branch_postfix(k_mb, op_a, arg_a, spec)
+    else:
+        op_x, arg_x = crossover(k_x, op_a, arg_a, op_b, arg_b, spec)
+        op_mb, arg_mb = mutate_branch(k_mb, op_a, arg_a, spec)
+    # mutate_point is arity-preserving in place — valid on both forms.
     if point_rate is None:
         op_mp, arg_mp = mutate_point(k_mp, op_a, arg_a, spec)
     else:

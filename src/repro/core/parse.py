@@ -119,11 +119,45 @@ def _fill(node, op, arg, idx, spec):
             _fill(b, op, arg, 2 * idx + 2, spec)
 
 
+def _emit_postfix(node, out):
+    """Postorder walk → list of (op, arg) instructions. Emitting directly
+    (not via a heap) keeps deep-but-narrow expressions parseable: postfix
+    genomes are bounded by instruction count and operand-stack depth, not
+    by the heap's depth ceiling."""
+    if node[0] == "feat":
+        out.append((prim.FEATURE, node[1]))
+    elif node[0] == "const":
+        out.append((prim.CONST, node[1]))
+    else:
+        code, a, b = node
+        _emit_postfix(a, out)
+        if b is not None:
+            _emit_postfix(b, out)
+        out.append((code, 0))
+
+
 def parse_tree(expr: str, spec: TreeSpec, feature_names=None):
-    """One expression string → (op, arg) int32 rows of length num_nodes."""
+    """One expression string → (op, arg) int32 rows of length num_nodes,
+    in the spec's genome form."""
     node = _Parser(_tokenize(expr), spec, feature_names).parse()
     op = np.zeros(spec.num_nodes, np.int32)
     arg = np.zeros(spec.num_nodes, np.int32)
+    if spec.genome == "postfix":
+        prog: list = []
+        _emit_postfix(node, prog)
+        if len(prog) > spec.num_nodes:
+            raise ValueError(f"expression has {len(prog)} nodes; postfix "
+                             f"genomes hold at most {spec.num_nodes}")
+        depth = 0
+        for code, _ in prog:
+            depth += 1 - int(prim.ARITY[code])
+            if depth > spec.stack_size:
+                raise ValueError(
+                    f"expression needs operand-stack depth {depth} > "
+                    f"stack_size={spec.stack_size} (P5)")
+        for t, (code, a) in enumerate(prog):
+            op[t], arg[t] = code, a
+        return op, arg
     _fill(node, op, arg, 0, spec)
     return op, arg
 

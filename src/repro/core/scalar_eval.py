@@ -74,7 +74,32 @@ def eval_tree_scalar(op_row, arg_row, row, const_table, idx: int = 0) -> float:
     return float(np.float32(_apply(p.name, a, b)))
 
 
-def evaluate_population_scalar(op, arg, X_rows, const_table) -> np.ndarray:
+def eval_postfix_scalar(op_row, arg_row, row, const_table) -> float:
+    """Evaluate one postfix stream on ONE data row with a list stack —
+    the scalar oracle for the linear-genome interpreters. Same f32
+    rounding discipline per node as `eval_tree_scalar`."""
+    stack: list[float] = []
+    for t in range(len(op_row)):
+        o = int(op_row[t])
+        if o == prim.EMPTY:
+            break
+        if o == prim.CONST:
+            stack.append(float(np.float32(const_table[int(arg_row[t])])))
+        elif o == prim.FEATURE:
+            stack.append(float(np.float32(row[int(arg_row[t])])))
+        else:
+            p = prim.FUNCTIONS[o - 3]
+            if p.arity == 1:
+                a, b = stack.pop(), 0.0
+            else:
+                b = stack.pop()
+                a = stack.pop()
+            stack.append(float(np.float32(_apply(p.name, a, b))))
+    return stack[0] if stack else 0.0
+
+
+def evaluate_population_scalar(op, arg, X_rows, const_table,
+                               genome: str = "tree") -> np.ndarray:
     """preds[p, d] via per-tree, per-row recursion. X_rows: [D, F] row-major
     (the paper's Eq. 1 layout — the un-transposed original)."""
     op = np.asarray(op)
@@ -82,16 +107,17 @@ def evaluate_population_scalar(op, arg, X_rows, const_table) -> np.ndarray:
     X_rows = np.asarray(X_rows)
     const_table = np.asarray(const_table)
     P, D = op.shape[0], X_rows.shape[0]
+    one = eval_postfix_scalar if genome == "postfix" else eval_tree_scalar
     out = np.empty((P, D), np.float32)
     for p in range(P):
         for d in range(D):
-            out[p, d] = eval_tree_scalar(op[p], arg[p], X_rows[d], const_table)
+            out[p, d] = one(op[p], arg[p], X_rows[d], const_table)
     return out
 
 
 def fitness_scalar(op, arg, X_rows, y, const_table, kernel: str = "r",
                    n_classes: int = 3, precision: float = 1e-4,
-                   weight=None) -> np.ndarray:
+                   weight=None, genome: str = "tree") -> np.ndarray:
     """Scalar-evaluated predictions reduced by the registered FitnessKernel
     (the reduction is negligible next to the per-point interpreter; sharing
     the kernel registry keeps the NaN semantics identical across paths).
@@ -99,7 +125,8 @@ def fitness_scalar(op, arg, X_rows, y, const_table, kernel: str = "r",
     the vectorized paths."""
     from repro.core.fitness import FitnessSpec, fitness_from_preds
 
-    preds = evaluate_population_scalar(op, arg, X_rows, const_table)
+    preds = evaluate_population_scalar(op, arg, X_rows, const_table,
+                                       genome=genome)
     spec = FitnessSpec(kernel, n_classes=n_classes, precision=precision)
     w = None if weight is None else np.asarray(weight, np.float32)
     return np.asarray(fitness_from_preds(preds, np.asarray(y, np.float32), spec,

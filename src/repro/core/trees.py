@@ -1,15 +1,18 @@
-"""Heap-tensor GP tree representation + ramped half-and-half generation.
+"""GP genome representations + ramped half-and-half generation.
 
 A population is a pair of integer tensors:
 
-    op  : int32[pop, NODES]   opcode per heap slot (see primitives)
+    op  : int32[pop, NODES]   opcode per slot (see primitives)
     arg : int32[pop, NODES]   feature index (FEATURE) or const index (CONST)
 
-NODES = 2**(max_depth+1) - 1 — a complete binary heap: node ``i`` has
-children ``2i+1``/``2i+2`` and depth ``floor(log2(i+1))``. The paper's
-``tree depth max = 5`` becomes NODES = 63. This encoding is the central
-TPU adaptation: the whole population is evaluated by one static,
-level-synchronous program (no per-tree graphs, no recompilation).
+with NODES = 2**(max_depth+1) - 1, read in one of TWO forms selected by
+``TreeSpec.genome``:
+
+``genome="tree"`` — heap-tensor prefix trees (the original encoding):
+node ``i`` has children ``2i+1``/``2i+2`` and depth ``floor(log2(i+1))``.
+The paper's ``tree depth max = 5`` becomes NODES = 63. This encoding is
+the central TPU adaptation: the whole population is evaluated by one
+static, level-synchronous program (no per-tree graphs, no recompile).
 
 Well-formedness invariants (preserved by generation and by every genetic
 operator in evolve.py):
@@ -18,6 +21,24 @@ operator in evolve.py):
       a non-EMPTY left child and an EMPTY right child;
   I3  terminal (CONST/FEATURE) and EMPTY slots have EMPTY children;
   I4  slots at max depth hold terminals only.
+
+``genome="postfix"`` — linear postfix genomes (arXiv:2110.11226 /
+EvoGP-style): the same ``int32[pop, NODES]`` buffers hold a postfix
+instruction stream per row — terminals push, functions pop their
+operands and push the result — padded with EMPTY after the program's
+active length. Same shapes, so GPState/checkpoints/islands/service
+layouts carry either form; crossover and branch mutation become array
+splicing (evolve.py) and evaluation becomes a single stack-machine walk
+(core/eval.py jnp reference, kernels/gp_eval.py Pallas kernel).
+
+Postfix invariants (P1–P5, checked by `check_invariants`):
+  P1  the active program is a contiguous non-EMPTY prefix (length ≥ 1);
+  P2  the first instruction is a terminal;
+  P3  running stack depth S(t) = cumsum(1 - arity) stays ≥ 1 on every
+      active prefix (operands exist when a function executes);
+  P4  S(len-1) == 1 (exactly one result remains);
+  P5  max S(t) ≤ TreeSpec.stack_size (the operand stack the interpreters
+      commit to — max_depth + 1, enough for any depth-ceiling tree).
 """
 from __future__ import annotations
 
@@ -57,7 +78,13 @@ def subtree_mask_table(num_nodes: int) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class TreeSpec:
-    """Static parameters of a tree population (hashable for jit)."""
+    """Static parameters of a tree population (hashable for jit).
+
+    `genome` selects the population encoding: "tree" (heap prefix trees,
+    the parity oracle) or "postfix" (linear postfix genomes evaluated by
+    the stack interpreters). Both live in the same int32[P, NODES]
+    buffers, so every state/checkpoint/mesh layout is encoding-agnostic.
+    """
 
     max_depth: int = 5
     n_features: int = 2
@@ -65,10 +92,17 @@ class TreeSpec:
     fn_set: prim.FunctionSet = prim.ARITHMETIC
     p_const: float = 0.2  # probability a terminal is a constant
     grow_p_fn: float = 0.6  # probability an internal slot is a function (grow)
+    genome: str = "tree"  # "tree" | "postfix"
+
+    def __post_init__(self):
+        if self.genome not in ("tree", "postfix"):
+            raise ValueError(f"genome must be 'tree' or 'postfix', "
+                             f"got {self.genome!r}")
 
     def __hash__(self):
         return hash((self.max_depth, self.n_features, self.n_consts,
-                     tuple(self.fn_set.opcodes.tolist()), self.p_const, self.grow_p_fn))
+                     tuple(self.fn_set.opcodes.tolist()), self.p_const,
+                     self.grow_p_fn, self.genome))
 
     def __eq__(self, other):
         return isinstance(other, TreeSpec) and hash(self) == hash(other)
@@ -76,6 +110,14 @@ class TreeSpec:
     @property
     def num_nodes(self) -> int:
         return n_nodes(self.max_depth)
+
+    @property
+    def stack_size(self) -> int:
+        """Operand-stack bound the postfix interpreters commit to. Postorder
+        evaluation of any tree within the depth ceiling needs at most
+        max_depth + 1 live operands; splice operators reject offspring that
+        would exceed it (evolve.py), so the bound is an invariant (P5)."""
+        return self.max_depth + 1
 
     def const_table(self) -> jnp.ndarray:
         # Karoo-style integer constant terminals, symmetric around zero.
@@ -111,7 +153,10 @@ def generate_population(key, pop: int, spec: TreeSpec):
 
     Trees are assigned a ramp depth in [1, max_depth] and a method
     (full | grow), then generated top-down level by level, vectorized
-    over [pop, level_width]. Returns (op, arg): int32[pop, NODES].
+    over [pop, level_width]. Returns (op, arg): int32[pop, NODES] — in
+    the spec's genome form (heap layout, converted to postfix streams
+    when spec.genome == "postfix"; the draw itself is identical, so both
+    forms sample the same tree distribution from the same key).
     """
     N = spec.num_nodes
     D = spec.max_depth
@@ -153,31 +198,213 @@ def generate_population(key, pop: int, spec: TreeSpec):
             r_act = lvl_active & (arity == 2)
             child = jnp.stack([l_act, r_act], axis=-1).reshape(pop, 2 * w)
             active = jax.lax.dynamic_update_slice(active, child, (0, 2 * w - 1))
+    if spec.genome == "postfix":
+        return heap_to_postfix(op, arg)
     return op, arg
+
+
+# --- postfix linear genomes ---------------------------------------------------
+
+
+def postorder_table(num_nodes: int) -> np.ndarray:
+    """PO[i] = postorder rank of heap slot i over the FULL complete heap.
+
+    Pruned trees restrict to their active slots: pruning removes whole
+    subtrees, so the relative postorder of the surviving nodes is exactly
+    the full-heap postorder filtered to them — which is what
+    `heap_to_postfix` exploits to convert with one static permutation."""
+    pos = np.zeros(num_nodes, np.int32)
+    counter = [0]
+
+    def visit(i):
+        if i >= num_nodes:
+            return
+        visit(2 * i + 1)
+        visit(2 * i + 2)
+        pos[i] = counter[0]
+        counter[0] += 1
+
+    visit(0)
+    return pos
+
+
+def heap_to_postfix(op, arg):
+    """Heap populations → postfix streams, jittable, any leading dims.
+
+    Per row: permute slots into full-heap postorder, then compact the
+    non-EMPTY entries to the front (rank = running count of active
+    slots); the EMPTY tail pads to NODES. int32[..., N] → int32[..., N].
+    """
+    op = jnp.asarray(op)
+    arg = jnp.asarray(arg)
+    N = op.shape[-1]
+    perm = jnp.asarray(np.argsort(postorder_table(N)))
+
+    def one(op_row, arg_row):
+        op_po = op_row[perm]
+        arg_po = arg_row[perm]
+        active = op_po != prim.EMPTY
+        rank = jnp.where(active, jnp.cumsum(active) - 1, N)
+        out_op = jnp.zeros((N,), jnp.int32).at[rank].set(op_po, mode="drop")
+        out_arg = jnp.zeros((N,), jnp.int32).at[rank].set(arg_po, mode="drop")
+        return out_op, out_arg
+
+    lead = op.shape[:-1]
+    out_op, out_arg = jax.vmap(one)(op.reshape(-1, N), arg.reshape(-1, N))
+    return out_op.reshape(*lead, N), out_arg.reshape(*lead, N)
+
+
+def postfix_to_heap(op, arg, spec: TreeSpec):
+    """Postfix populations → heap trees (host-side; tests/parity oracle).
+
+    Raises ValueError on malformed streams or programs too deep for the
+    heap's max_depth ceiling (spliced postfix genomes may legally exceed
+    it — only depth-bounded programs round-trip)."""
+    op = np.asarray(op).reshape(-1, np.asarray(op).shape[-1])
+    arg = np.asarray(arg).reshape(-1, op.shape[-1])
+    P, N = op.shape
+    out_op = np.zeros((P, N), np.int32)
+    out_arg = np.zeros((P, N), np.int32)
+    for p in range(P):
+        stack = []
+        for t in range(N):
+            o = int(op[p, t])
+            if o == prim.EMPTY:
+                break
+            a = int(prim.ARITY[o])
+            if a == 0:
+                stack.append((o, int(arg[p, t]), None, None))
+            elif a == 1:
+                if not stack:
+                    raise ValueError(f"row {p}: unary op at {t} with empty stack")
+                c = stack.pop()
+                stack.append((o, 0, c, None))
+            else:
+                if len(stack) < 2:
+                    raise ValueError(f"row {p}: binary op at {t} underflows")
+                r = stack.pop()
+                l_ = stack.pop()
+                stack.append((o, 0, l_, r))
+        if len(stack) != 1:
+            raise ValueError(f"row {p}: postfix stream leaves {len(stack)} "
+                             f"values on the stack (want 1)")
+
+        def place(node, idx):
+            if idx >= N:
+                raise ValueError(f"row {p}: program deeper than "
+                                 f"max_depth={spec.max_depth}; it has no heap "
+                                 f"form (postfix-only genome)")
+            o, a, l_, r = node
+            out_op[p, idx] = o
+            out_arg[p, idx] = a
+            if l_ is not None:
+                place(l_, 2 * idx + 1)
+            if r is not None:
+                place(r, 2 * idx + 2)
+
+        place(stack[0], 0)
+    return out_op, out_arg
+
+
+def postfix_stack_depths(op) -> jnp.ndarray:
+    """S int32[..., N]: running operand-stack depth AFTER each instruction
+    (cumsum of 1 - arity). Only meaningful on the active prefix — EMPTY
+    slots contribute +1 each, so mask with (op != EMPTY) before use."""
+    ar = jnp.asarray(prim.ARITY)[jnp.asarray(op)]
+    return jnp.cumsum(1 - ar, axis=-1).astype(jnp.int32)
+
+
+def subtree_spans(op) -> jnp.ndarray:
+    """start int32[..., N]: for each position i, the index where the
+    subtree (complete subexpression) ENDING at i begins.
+
+    In postfix, the subexpression ending at i starts right after the last
+    t < i whose running depth S(t) is strictly below S(i) (no such t →
+    0). O(N²) masked max per row — cheap at N = 63. Values beyond a
+    row's active length are garbage; callers only index active slots."""
+    op = jnp.asarray(op)
+    N = op.shape[-1]
+    S = postfix_stack_depths(op)
+    t = jnp.arange(N, dtype=jnp.int32)
+    below = (t[..., None, :] < t[..., :, None]) & (S[..., None, :] < S[..., :, None])
+    last = jnp.max(jnp.where(below, t[..., None, :], -1), axis=-1)
+    return (last + 1).astype(jnp.int32)
+
+
+def postfix_lhs_index(op) -> jnp.ndarray:
+    """lhs int32[..., N]: for a binary function at position i, the index of
+    its LEFT operand's result — start(i-1) - 1, because the right operand
+    is always the result of i-1. Garbage (clipped ≥ -1) on non-binary
+    slots; the stack kernel only reads it under the binary predicate."""
+    start = subtree_spans(op)
+    lhs = jnp.concatenate(
+        [jnp.zeros_like(start[..., :1]), start[..., :-1] - 1], axis=-1)
+    return lhs
 
 
 # --- host-side pretty printing (archive/display, like fx_display_) ----------
 
 
-def to_string(op_row, arg_row, feature_names=None, const_table=None, idx: int = 0) -> str:
-    """Render one heap tree as an infix expression string (host-side)."""
+_INFIX_SYM = {"add": "+", "sub": "-", "mul": "*", "div": "/"}
+
+
+def _terminal_str(o, a, feature_names, const_table) -> str:
+    if o == prim.CONST:
+        c = float(const_table[a]) if const_table is not None else a
+        return f"{c:g}" if isinstance(c, float) else f"c{a}"
+    return feature_names[a] if feature_names else f"x{a}"
+
+
+def to_string(op_row, arg_row, feature_names=None, const_table=None,
+              idx: int = 0, *, genome: str = "tree") -> str:
+    """Render one genome row as an infix expression string (host-side).
+    Both forms emit the identical grammar (`core/parse.py` round-trips
+    it); `genome="postfix"` walks the instruction stream with a string
+    stack instead of recursing the heap."""
     op_row = np.asarray(op_row)
     arg_row = np.asarray(arg_row)
+    if genome == "postfix":
+        return _postfix_to_string(op_row, arg_row, feature_names, const_table)
     o = int(op_row[idx])
     if o == prim.EMPTY:
         return "∅"
-    if o == prim.CONST:
-        c = float(const_table[arg_row[idx]]) if const_table is not None else arg_row[idx]
-        return f"{c:g}" if isinstance(c, float) else f"c{arg_row[idx]}"
-    if o == prim.FEATURE:
-        return feature_names[arg_row[idx]] if feature_names else f"x{arg_row[idx]}"
+    if o in (prim.CONST, prim.FEATURE):
+        return _terminal_str(o, int(arg_row[idx]), feature_names, const_table)
     p = prim.FUNCTIONS[o - 3]
     lhs = to_string(op_row, arg_row, feature_names, const_table, 2 * idx + 1)
     if p.arity == 1:
         return f"{p.name}({lhs})"
     rhs = to_string(op_row, arg_row, feature_names, const_table, 2 * idx + 2)
-    sym = {"add": "+", "sub": "-", "mul": "*", "div": "/"}.get(p.name)
+    sym = _INFIX_SYM.get(p.name)
     return f"({lhs} {sym} {rhs})" if sym else f"{p.name}({lhs}, {rhs})"
+
+
+def _postfix_to_string(op_row, arg_row, feature_names, const_table) -> str:
+    """String-stack rendering of one postfix stream — same output as the
+    heap renderer on the equivalent tree, character for character."""
+    stack: list[str] = []
+    for t in range(op_row.shape[0]):
+        o = int(op_row[t])
+        if o == prim.EMPTY:
+            break
+        if o in (prim.CONST, prim.FEATURE):
+            stack.append(_terminal_str(o, int(arg_row[t]), feature_names,
+                                       const_table))
+            continue
+        p = prim.FUNCTIONS[o - 3]
+        if p.arity == 1:
+            stack.append(f"{p.name}({stack.pop()})")
+        else:
+            rhs = stack.pop()
+            lhs = stack.pop()
+            sym = _INFIX_SYM.get(p.name)
+            stack.append(f"({lhs} {sym} {rhs})" if sym
+                         else f"{p.name}({lhs}, {rhs})")
+    if not stack:
+        return "∅"
+    if len(stack) != 1:
+        raise ValueError(f"malformed postfix stream: {len(stack)} results")
+    return stack[0]
 
 
 def tree_sizes(op) -> jnp.ndarray:
@@ -185,9 +412,8 @@ def tree_sizes(op) -> jnp.ndarray:
     return (op != prim.EMPTY).sum(-1)
 
 
-def check_invariants(op: np.ndarray, spec: TreeSpec) -> None:
-    """Assert well-formedness I1–I4 (host-side, used by tests)."""
-    op = np.asarray(op)
+def _check_heap_invariants(op: np.ndarray, spec: TreeSpec) -> None:
+    """Assert heap well-formedness I1–I4."""
     N = spec.num_nodes
     depth = depth_table(N)
     arity = prim.ARITY[op]
@@ -201,3 +427,58 @@ def check_invariants(op: np.ndarray, spec: TreeSpec) -> None:
         assert ((a >= 1) | (l == prim.EMPTY)).all(), f"I3: stray left child of {i}"
     leaf = depth == spec.max_depth
     assert (prim.ARITY[op[:, leaf]] == 0).all(), "I4: function at max depth"
+
+
+def _check_postfix_invariants(op: np.ndarray, spec: TreeSpec) -> None:
+    """Assert postfix well-formedness P1–P5."""
+    N = spec.num_nodes
+    arity = prim.ARITY[op]
+    active = op != prim.EMPTY
+    lens = active.sum(-1)
+    idx = np.arange(N)
+    assert (lens >= 1).all(), "P1: empty program"
+    assert (active == (idx[None, :] < lens[:, None])).all(), \
+        "P1: EMPTY slot inside the active prefix"
+    assert (arity[:, 0] == 0).all(), "P2: first instruction is not a terminal"
+    S = np.cumsum(1 - arity, axis=-1)
+    act_S = np.where(active, S, 1)
+    assert (act_S >= 1).all(), "P3: operand-stack underflow mid-program"
+    assert (S[np.arange(op.shape[0]), lens - 1] == 1).all(), \
+        "P4: program does not leave exactly one result"
+    assert (act_S <= spec.stack_size).all(), \
+        f"P5: operand-stack depth exceeds stack_size={spec.stack_size}"
+
+
+_FORM_CHECKS = {"tree": _check_heap_invariants,
+                "postfix": _check_postfix_invariants}
+
+
+def check_invariants(op: np.ndarray, spec: TreeSpec) -> None:
+    """Assert well-formedness of a population in the spec's genome form
+    (host-side, used by tests): heap invariants I1–I4 for genome="tree",
+    postfix invariants P1–P5 for genome="postfix".
+
+    If the rows FAIL their declared form but satisfy the other one, the
+    population is almost certainly a state saved under the other encoding
+    (e.g. an old pre-postfix checkpoint restored into a postfix config) —
+    that raises a ValueError naming the mismatch instead of a bare
+    AssertionError.
+    """
+    op = np.asarray(op).reshape(-1, spec.num_nodes)
+    assert ((op >= 0) & (op < len(prim.ARITY))).all(), "invalid opcode"
+    other = {"tree": "postfix", "postfix": "tree"}[spec.genome]
+    try:
+        _FORM_CHECKS[spec.genome](op, spec)
+    except AssertionError as err:
+        try:
+            _FORM_CHECKS[other](op, spec)
+        except AssertionError:
+            raise err from None
+        raise ValueError(
+            f"population violates the {spec.genome!r} genome invariants "
+            f"({err}) but satisfies the {other!r} form — was this state "
+            f"loaded from a checkpoint written under TreeSpec."
+            f"genome={other!r}? Convert it with trees.heap_to_postfix / "
+            f"trees.postfix_to_heap (host) or re-initialize, and keep "
+            f"TreeSpec.genome consistent with the stored population."
+        ) from err

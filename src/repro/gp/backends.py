@@ -143,7 +143,8 @@ def _scalar_evaluate(op, arg, X, const_table, tree_spec):
 
     X_rows = np.ascontiguousarray(np.asarray(X, np.float32).T)  # [F,D] -> [D,F]
     return evaluate_population_scalar(np.asarray(op), np.asarray(arg),
-                                      X_rows, np.asarray(const_table))
+                                      X_rows, np.asarray(const_table),
+                                      genome=tree_spec.genome)
 
 
 def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
@@ -155,7 +156,8 @@ def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None
                           np.asarray(y), np.asarray(const_table),
                           kernel=fit_spec.kernel, n_classes=fit_spec.n_classes,
                           precision=fit_spec.precision,
-                          weight=None if weight is None else np.asarray(weight))
+                          weight=None if weight is None else np.asarray(weight),
+                          genome=tree_spec.genome)
 
 
 def _scalar_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,

@@ -94,7 +94,8 @@ class MeshTopology:
         return make_host_mesh(data=self.data, model=self.model, pod=self.pod)
 
 
-_TREE_KEYS = ("max_depth", "n_features", "n_consts", "fn_set", "p_const", "grow_p_fn")
+_TREE_KEYS = ("max_depth", "n_features", "n_consts", "fn_set", "p_const",
+              "grow_p_fn", "genome")
 _FIT_KEYS = ("kernel", "n_classes", "precision")
 # flat spellings of IslandConfig fields (migrate_every/migrate_k ride the
 # GPConfig legacy aliases); "islands" is the headline front-door knob
@@ -346,6 +347,14 @@ class GPSession:
         else:
             self._X, self._y = X_fm, y
             self._weight = sample_weight
+        if self.state is not None and self.state.cache_fit.size:
+            # new data invalidates the elite fitness cache (cached scores
+            # were measured against the old dataset) — reset to the
+            # never-matching init, so the next generation re-evaluates
+            self.state = self.state._replace(
+                cache_op=jnp.zeros_like(self.state.cache_op),
+                cache_arg=jnp.zeros_like(self.state.cache_arg),
+                cache_fit=jnp.full_like(self.state.cache_fit, jnp.inf))
         return self
 
     def init(self, *, key=None, seeds=None) -> "GPSession":
@@ -487,10 +496,26 @@ class GPSession:
         cfg = self._cfg
         if cfg.island.islands > 1:
             return self._host_step_islands(state)
-        fitness = np.asarray(self._backend.fitness(
-            np.asarray(state.op), np.asarray(state.arg), self._X, self._y,
-            np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
-            weight=self._weight, data_tile=cfg.data_tile), np.float32)
+
+        def eval_rows(op, arg):
+            return np.asarray(self._backend.fitness(
+                np.asarray(op), np.asarray(arg),
+                self._X, self._y, np.asarray(cfg.tree_spec.const_table()),
+                cfg.tree_spec, cfg.fitness, weight=self._weight,
+                data_tile=cfg.data_tile), np.float32)
+
+        # host mirror of engine._cached_fitness: exact genome match on the
+        # elite head skips its re-evaluation (bitwise-identical — cached
+        # fitness IS last generation's evaluation of the same rows)
+        E = state.cache_op.shape[0]
+        op_h, arg_h = np.asarray(state.op), np.asarray(state.arg)
+        hit = E and (np.array_equal(op_h[:E], np.asarray(state.cache_op))
+                     and np.array_equal(arg_h[:E], np.asarray(state.cache_arg)))
+        if hit:
+            fitness = np.concatenate([np.asarray(state.cache_fit),
+                                      eval_rows(op_h[E:], arg_h[E:])])
+        else:
+            fitness = eval_rows(op_h, arg_h)
         i = int(fitness.argmin())
         improved = fitness[i] < float(state.best_fitness)
         best_op = state.op[i] if improved else state.best_op
@@ -499,12 +524,22 @@ class GPSession:
         sel = fitness
         if cfg.parsimony:
             sel = fitness + cfg.parsimony * np.asarray(tree_sizes(state.op), np.float32)
+        if E:
+            # jnp.argsort (stable) — same tie-break order as the jitted
+            # next_generation's elite pick, so the cached rows are exactly
+            # the elites it will place at [:E] next generation
+            best = np.asarray(jnp.argsort(jnp.asarray(sel)))[:E]
+            cache = (jnp.asarray(op_h[best]), jnp.asarray(arg_h[best]),
+                     jnp.asarray(fitness[best]))
+        else:
+            cache = (state.cache_op, state.cache_arg, state.cache_fit)
         key, k_next = jax.random.split(state.key)
         next_gen = _backends.host_next_generation(
             cfg.tree_spec, cfg.mix, cfg.tourn_size, cfg.elitism)
         new_op, new_arg = next_gen(k_next, state.op, state.arg, jnp.asarray(sel))
         return GPState(key, new_op, new_arg, jnp.asarray(fitness), best_op, best_arg,
-                       jnp.asarray(best_fit, jnp.float32), state.generation + 1)
+                       jnp.asarray(best_fit, jnp.float32), state.generation + 1,
+                       *cache)
 
     def _host_step_islands(self, state: GPState) -> GPState:
         """Island generation on a host-only backend: evaluate the
@@ -518,11 +553,25 @@ class GPSession:
         I, P, N = state.op.shape
         op2 = np.asarray(state.op).reshape(I * P, N)
         arg2 = np.asarray(state.arg).reshape(I * P, N)
-        fitness = np.asarray(self._backend.fitness(
-            op2, arg2, self._X, self._y,
-            np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
-            weight=self._weight, data_tile=cfg.data_tile),
-            np.float32).reshape(I, P)
+
+        def eval_rows(o2, a2):
+            return np.asarray(self._backend.fitness(
+                o2, a2, self._X, self._y,
+                np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec,
+                cfg.fitness, weight=self._weight, data_tile=cfg.data_tile),
+                np.float32)
+
+        # one ALL-islands hit gate, mirroring engine._island_step_body
+        E = state.cache_op.shape[1]
+        op3, arg3 = op2.reshape(I, P, N), arg2.reshape(I, P, N)
+        hit = E and (np.array_equal(op3[:, :E], np.asarray(state.cache_op))
+                     and np.array_equal(arg3[:, :E], np.asarray(state.cache_arg)))
+        if hit:
+            tail = eval_rows(op3[:, E:].reshape(-1, N),
+                             arg3[:, E:].reshape(-1, N)).reshape(I, P - E)
+            fitness = np.concatenate([np.asarray(state.cache_fit), tail], axis=1)
+        else:
+            fitness = eval_rows(op2, arg2).reshape(I, P)
         i_best = fitness.argmin(axis=1)
         rows = np.arange(I)
         cand_fit = fitness[rows, i_best]
@@ -536,6 +585,14 @@ class GPSession:
         if cfg.parsimony:
             sizes = np.asarray(tree_sizes(jnp.asarray(op2)), np.float32)
             sel = fitness + cfg.parsimony * sizes.reshape(I, P)
+        if E:
+            best = np.asarray(jnp.argsort(jnp.asarray(sel), axis=-1))[:, :E]
+            rows_e = np.arange(I)[:, None]
+            cache = (jnp.asarray(op3[rows_e, best]),
+                     jnp.asarray(arg3[rows_e, best]),
+                     jnp.asarray(fitness[rows_e, best]))
+        else:
+            cache = (state.cache_op, state.cache_arg, state.cache_fit)
         next_gen = _backends.host_next_generation_islands(
             cfg.tree_spec, icfg, cfg.mix, cfg.tourn_size, cfg.elitism)
         keys, new_op, new_arg = next_gen(state.key, state.op, state.arg,
@@ -547,7 +604,7 @@ class GPSession:
                 icfg, new_op, new_arg, e_op, e_arg, state.generation,
                 jnp.asarray(cand_fit))
         return GPState(keys, new_op, new_arg, jnp.asarray(fitness), best_op,
-                       best_arg, best_fit, state.generation + 1)
+                       best_arg, best_fit, state.generation + 1, *cache)
 
     def _block_span(self, remaining: int) -> int:
         """Block size K = min(checkpoint period, callback period, explicit
@@ -715,7 +772,8 @@ class GPSession:
         from the device — one host sync."""
         op, arg = self._champion()
         return to_string(op, arg, feature_names=self.feature_names,
-                         const_table=np.asarray(self._cfg.tree_spec.const_table()))
+                         const_table=np.asarray(self._cfg.tree_spec.const_table()),
+                         genome=self._cfg.tree_spec.genome)
 
     def island_expressions(self) -> list[str]:
         """Each island's champion decoded to an infix string (a length-1
@@ -726,7 +784,8 @@ class GPSession:
         best_op, best_arg = np.atleast_2d(best_op), np.atleast_2d(best_arg)
         consts = np.asarray(self._cfg.tree_spec.const_table())
         return [to_string(o, a, feature_names=self.feature_names,
-                          const_table=consts)
+                          const_table=consts,
+                          genome=self._cfg.tree_spec.genome)
                 for o, a in zip(best_op, best_arg)]
 
     def predict(self, X, *, layout: str = "rows") -> np.ndarray:

@@ -125,6 +125,157 @@ def _eval_fitness_kernel(op_ref, arg_ref, x_ref, y_ref, w_ref, const_ref, out_re
         out_ref[...] = kern.merge_moments(out_ref[...], partial, spec)
 
 
+def _eval_fitness_postfix_kernel(op_ref, arg_ref, len_ref, x_ref,
+                                 y_ref, w_ref, const_ref, out_ref, *,
+                                 stack_size: int, n_features: int,
+                                 n_consts: int, kernel: str,
+                                 n_classes: int, precision: float, gather: str,
+                                 fn_codes=None):
+    """One (pop_tile, data_tile) block of the postfix stack interpreter.
+
+    Instead of the tree kernel's level sweep over all NODES slots, each
+    iteration executes ONE postfix instruction for the whole tile: a
+    `fori_loop` whose trip count is the tile's max active length — with
+    ops.py sorting rows by length, short-program tiles finish early,
+    which is where the linear genome's speedup comes from.
+
+    Per-instruction state is a shift-register operand stack f32[Pb, S, Db]
+    with S = TreeSpec.stack_size = max_depth + 1 (invariant P5 bounds the
+    operand depth, so S slots always suffice). Slot 0 is the top:
+    terminals shift-push their value, unary functions replace the top,
+    binary functions fold the top two and shift up. Both operands are
+    the top two slots by construction — no result-buffer gather at all,
+    and the carried state is S/N of the res-buffer alternative's VMEM
+    (the win that lets data tiles grow). Rows shorter than the tile's
+    trip count hold their stack through the EMPTY tail (P1 makes the
+    tail contiguous), so preds is simply the final top-of-stack.
+    """
+    j = pl.program_id(1)
+    ops = op_ref[...]  # int32[Pb, N]
+    args = arg_ref[...]
+    lens = len_ref[...]  # int32[Pb]
+    X = x_ref[...]  # f32[F, Db]
+    consts = const_ref[...]  # f32[C]
+    Pb, N = ops.shape
+    Db = X.shape[1]
+    S = stack_size
+
+    codes = (list(fn_codes) if fn_codes is not None
+             else list(range(_FN_BASE, _FN_BASE + len(prim.FUNCTIONS))))
+    bin_codes = [c for c in codes if prim.ARITY[c] == 2]
+
+    def body(t, stack):
+        opt = jax.lax.dynamic_index_in_dim(ops, t, 1, keepdims=False)  # [Pb]
+        argt = jax.lax.dynamic_index_in_dim(args, t, 1, keepdims=False)
+
+        # terminal value for this instruction
+        if gather == "onehot":
+            f_iota = jax.lax.broadcasted_iota(jnp.int32, (Pb, n_features), 1)
+            onehot = (f_iota == argt[:, None]).astype(jnp.float32)
+            feat = jax.lax.dot_general(
+                onehot, X, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)  # [Pb, Db]
+        else:
+            feat = jnp.take(X, jnp.clip(argt, 0, n_features - 1), axis=0)
+        c_iota = jax.lax.broadcasted_iota(jnp.int32, (Pb, n_consts), 1)
+        cons = jnp.sum((c_iota == argt[:, None]).astype(jnp.float32)
+                       * consts[None, :], axis=1)  # [Pb]
+        tval = jnp.where((opt == prim.FEATURE)[:, None], feat,
+                         jnp.broadcast_to(cons[:, None], (Pb, Db)))
+
+        # function value: operands are the stack's top two slots (rhs =
+        # top — postfix emits the right subtree last)
+        top, sec = stack[:, 0], stack[:, 1]
+        is_bin = jnp.zeros((Pb,), jnp.bool_)
+        for c in bin_codes:
+            is_bin = is_bin | (opt == c)
+        lhs = jnp.where(is_bin[:, None], sec, top)
+        fnv = _apply_function_inline(opt[:, None], lhs, top, fn_codes)
+
+        push = jnp.concatenate([tval[:, None], stack[:, :S - 1]], axis=1)
+        una = stack.at[:, 0].set(fnv)
+        binr = jnp.concatenate([fnv[:, None], stack[:, 2:],
+                                jnp.zeros((Pb, 1, Db), jnp.float32)], axis=1)
+        is_term = (opt < _FN_BASE)[:, None, None]
+        new = jnp.where(is_term, push,
+                        jnp.where(is_bin[:, None, None], binr, una))
+        # EMPTY tail: hold, so a finished row's result stays on top while
+        # longer rows in the tile keep executing
+        return jnp.where((opt == prim.EMPTY)[:, None, None], stack, new)
+
+    trip = jnp.max(lens)  # dynamic: sorted tiles of short programs exit early
+    stack = jax.lax.fori_loop(0, trip, body,
+                              jnp.zeros((Pb, S, Db), jnp.float32))
+    preds = stack[:, 0]
+
+    # ---- identical fused moment epilogue to the tree kernel -----------------
+    y = y_ref[...]
+    wgt = w_ref[...]
+    spec = fit.FitnessSpec(kernel, n_classes=n_classes, precision=precision)
+    kern = fit.get_kernel(kernel)
+    partial = kern.moments(preds, y, wgt, spec)  # [Pb, M]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = kern.merge_moments(out_ref[...], partial, spec)
+
+
+def eval_fitness_pallas_postfix(op, arg, lens, X, y, weight,
+                                const_table, *, stack_size: int,
+                                kernel: str = "r",
+                                n_classes: int = 3, precision: float = 1e-4,
+                                gather: str = "vmem", pop_tile: int = 8,
+                                data_tile: int = 1024,
+                                interpret: bool | None = None, fn_codes=None):
+    """Fused postfix eval+moments over pre-padded inputs.
+
+    op, arg:  int32[P, N]   postfix streams, P % pop_tile == 0
+    lens:     int32[P]      active lengths (sort rows by length upstream so
+                            tiles of short programs take short fori trips)
+    X:        f32[F, D]     D % data_tile == 0
+    returns   f32[P, M]     accumulated weighted moments, same contract as
+                            eval_fitness_pallas
+
+    `stack_size` is TreeSpec.stack_size (= max_depth + 1), the operand-
+    stack bound invariant P5 guarantees. The default gather is "vmem":
+    the stack kernel looks up ONE terminal row per instruction, where a
+    dynamic take beats the one-hot matmul's F-fold FLOP blowup.
+    """
+    P, N = op.shape
+    F, D = X.shape
+    assert P % pop_tile == 0 and D % data_tile == 0, (P, D, pop_tile, data_tile)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_moments = fit.get_kernel(kernel).n_moments
+
+    grid = (P // pop_tile, D // data_tile)
+    body = functools.partial(
+        _eval_fitness_postfix_kernel, stack_size=stack_size, n_features=F,
+        n_consts=const_table.shape[0], kernel=kernel, n_classes=n_classes,
+        precision=precision, gather=gather, fn_codes=fn_codes)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pop_tile, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((pop_tile, N), lambda i, j: (i, 0)),
+            pl.BlockSpec((pop_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((F, data_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((const_table.shape[0],), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((pop_tile, n_moments), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, n_moments), jnp.float32),
+        interpret=interpret,
+    )(op, arg, lens, X.astype(jnp.float32), y.astype(jnp.float32),
+      weight.astype(jnp.float32), const_table.astype(jnp.float32))
+
+
 def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
                         kernel: str = "r", n_classes: int = 3, precision: float = 1e-4,
                         gather: str = "onehot", pop_tile: int = 8, data_tile: int = 1024,

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from repro.core.fitness import FitnessSpec
 from repro.core.trees import TreeSpec
 from repro.kernels import ref as _ref
-from repro.kernels.gp_eval import eval_fitness_pallas
+from repro.kernels.gp_eval import eval_fitness_pallas, eval_fitness_pallas_postfix
 
 _VMEM_BUDGET = 12 * 2**20  # bytes; leave headroom under ~16 MB/core
 
@@ -53,6 +53,30 @@ def pick_tiles(n_features: int, n_nodes: int, pop: int, data: int,
     return pop_tile, Db, gather
 
 
+def pick_tiles_postfix(n_features: int, stack_size: int, pop: int, data: int,
+                       pop_tile: int = 8, data_tile: int = 1024,
+                       gather: str | None = None):
+    """Tile pick for the postfix stack kernel. The carried state is a
+    [Pb, S, Db] stack (S = max_depth + 1), ~S/N of the tree kernel's
+    node-resident buffers, so the data tile can grow under the same VMEM
+    budget — fewer, larger grid blocks amortize the per-instruction loop.
+    Gather defaults to "vmem": the stack kernel reads ONE terminal row
+    per instruction, where a dynamic take beats a one-hot matmul."""
+    if gather is None:
+        gather = "vmem"
+    Db = data_tile
+
+    def vmem(Db):
+        # X tile + stack + the handful of [Pb, Db] per-instruction temps
+        return 4 * (n_features * Db + pop_tile * (stack_size + 8) * Db)
+
+    while Db * 2 <= data and vmem(Db * 2) <= _VMEM_BUDGET and Db < 2048:
+        Db *= 2
+    while Db > 128 and vmem(Db) > _VMEM_BUDGET:
+        Db //= 2
+    return pop_tile, Db, gather
+
+
 def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
                     fit_spec: FitnessSpec, weight, data_tile: int, pop_tile: int,
                     gather: str | None, interpret: bool | None):
@@ -61,7 +85,12 @@ def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
     exact 0.0 and the grid accumulation stays padding-invariant."""
     P, N = op.shape
     F, D = X.shape
-    pop_tile, data_tile, gather = pick_tiles(F, N, P, D, pop_tile, data_tile, gather)
+    if tree_spec.genome == "postfix":
+        pop_tile, data_tile, gather = pick_tiles_postfix(
+            F, tree_spec.stack_size, P, D, pop_tile, data_tile, gather)
+    else:
+        pop_tile, data_tile, gather = pick_tiles(F, N, P, D, pop_tile,
+                                                 data_tile, gather)
 
     pad_p = (-P) % pop_tile
     pad_d = (-D) % data_tile
@@ -75,12 +104,28 @@ def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
         y = jnp.pad(y, (0, pad_d))
         weight = jnp.pad(weight, (0, pad_d))
 
+    fn_codes = tuple(int(c) for c in tree_spec.fn_set.opcodes)
+    if tree_spec.genome == "postfix":
+        # Sort rows by active length so each pop tile's fori trip count is
+        # its own max length (short-program tiles finish early) — this
+        # sorting is where most of the postfix speedup lives. Moments are
+        # per-row, so sort → eval → unsort is exact; padded rows (len 0)
+        # sort to the front and are sliced off after the unsort.
+        lens = (op != 0).sum(-1).astype(jnp.int32)
+        order = jnp.argsort(lens)
+        op_s, arg_s = op[order], arg[order]
+        out = eval_fitness_pallas_postfix(
+            op_s, arg_s, lens[order], X, y, weight, const_table,
+            stack_size=tree_spec.stack_size, kernel=fit_spec.kernel,
+            n_classes=fit_spec.n_classes, precision=fit_spec.precision,
+            gather=gather, pop_tile=pop_tile, data_tile=data_tile,
+            interpret=interpret, fn_codes=fn_codes)
+        return out[jnp.argsort(order)][:P]
     out = eval_fitness_pallas(
         op, arg, X, y, weight, const_table, max_depth=tree_spec.max_depth,
         kernel=fit_spec.kernel, n_classes=fit_spec.n_classes,
         precision=fit_spec.precision, gather=gather, pop_tile=pop_tile,
-        data_tile=data_tile, interpret=interpret,
-        fn_codes=tuple(int(c) for c in tree_spec.fn_set.opcodes))
+        data_tile=data_tile, interpret=interpret, fn_codes=fn_codes)
     return out[:P]
 
 

@@ -232,6 +232,7 @@ def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False
     the cost/memory record covers the real device-resident loop surface
     (collectives included), not a single step."""
     from repro.core import GPState
+    from repro.core.engine import cache_width
     from repro.gp import GPSession
 
     pop, F, rows, kern = GP_CELLS[name]
@@ -242,12 +243,15 @@ def run_gp_cell(name: str, multi_pod: bool, out_dir: str, keep_hlo: bool = False
     spec = cfg.tree_spec
     block, specs = sess.build_sharded_block(block_steps)
     N = spec.num_nodes
+    E = cache_width(cfg)
     sds = jax.ShapeDtypeStruct
     state_shapes = GPState(
         key=sds((2,), jnp.uint32), op=sds((pop, N), jnp.int32),
         arg=sds((pop, N), jnp.int32), fitness=sds((pop,), jnp.float32),
         best_op=sds((N,), jnp.int32), best_arg=sds((N,), jnp.int32),
-        best_fitness=sds((), jnp.float32), generation=sds((), jnp.int32))
+        best_fitness=sds((), jnp.float32), generation=sds((), jnp.int32),
+        cache_op=sds((E, N), jnp.int32), cache_arg=sds((E, N), jnp.int32),
+        cache_fit=sds((E,), jnp.float32))
     state_sds = SH.named(mesh, specs["state"], state_shapes)
     X_sds = SH.named(mesh, specs["X"], sds((F, rows), jnp.float32))
     y_sds = SH.named(mesh, specs["y"], sds((rows,), jnp.float32))

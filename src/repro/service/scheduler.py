@@ -86,7 +86,8 @@ class GPService:
         self._block = jax.jit(engine.build_tenant_block(
             self.tree_spec, self.kernels, tourn_draw, elitism, block_size),
             donate_argnums=(0,))
-        self._state = engine.empty_tenant_state(slots, pop_size, self.tree_spec)
+        self._state = engine.empty_tenant_state(slots, pop_size, self.tree_spec,
+                                                elitism=elitism)
         self._gens = np.zeros((slots,), np.int64)  # host mirror of gens_done
         self._jobs: dict[int, JobHandle] = {}
         self._pending: list[JobHandle] = []
@@ -227,7 +228,7 @@ class GPService:
             else:
                 sub = engine.init_tenant_slot(
                     jax.random.PRNGKey(handle.spec.seed), self.pop_size,
-                    self.tree_spec)
+                    self.tree_spec, elitism=self.elitism)
             self._state = splice_island(self._state, slot, sub)
             self._gens[slot] = int(sub.gens_done)
             self.batch.admit(slot, handle)
@@ -271,7 +272,8 @@ class GPService:
             handle.best_expression = to_string(
                 handle.best_op, handle.best_arg,
                 feature_names=handle.spec.feature_names,
-                const_table=np.asarray(self.tree_spec.const_table()))
+                const_table=np.asarray(self.tree_spec.const_table()),
+                genome=self.tree_spec.genome)
         handle.status = status
         handle._cancel = False
         self.batch.evict(slot)
