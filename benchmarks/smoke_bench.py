@@ -25,6 +25,14 @@ no-recompile invariant (`service_compiles` must stay 1):
     PYTHONPATH=src python benchmarks/smoke_bench.py --bench service \
         --out BENCH_service.json
 
+`--bench stream` times streaming chunked fitness at the paper's 5.5M-
+data-point scale — a `datasets.stream_rows` synthetic stream folded
+chunk-by-chunk (`BENCH_stream.json`), with a monolithic comparison when
+the row count is small enough to materialize:
+
+    PYTHONPATH=src python benchmarks/smoke_bench.py --bench stream \
+        --rows 1100000 --chunk-rows 262144 --out BENCH_stream.json
+
 The numbers are NOT cross-machine comparable (CI runners vary); the
 artifact records the machine-free quantities too (generations, rows,
 pop, host syncs) so a trajectory can be assembled from like runners.
@@ -278,8 +286,72 @@ def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
     }
 
 
+def bench_stream(*, pop: int = 64, rows: int = 5_500_000, gens: int = 3,
+                 depth: int = 4, seed: int = 0, chunk_rows: int = 262_144,
+                 feats: int = 8) -> dict:
+    """Streaming chunked fitness at the paper's 5.5M-data-point scale.
+
+    Evolves over a synthetic `datasets.stream_rows` regression stream
+    with `GPSession.ingest(stream=..., chunk_rows=...)` — peak device
+    footprint is ONE `[feats, chunk_rows]` chunk no matter how many rows
+    stream past. When the dataset is small enough to materialize
+    (`rows <= 2M`), the same rows are also evaluated monolithically and
+    the best-fitness history compared, so the artifact doubles as a
+    chunking-parity check at bench scale."""
+    import numpy as np
+
+    from repro.data.datasets import stream_rows
+
+    source = stream_rows(rows=rows, feats=feats, seed=seed)
+    sess = GPSession(pop_size=pop, max_depth=depth, n_consts=8, kernel="mse",
+                     backend="jnp", generations=gens)
+    sess.ingest(stream=source, chunk_rows=chunk_rows)
+    sess.init(key=jax.random.PRNGKey(seed))
+    sess.step()  # compile + first full pass (n_rows discovered here)
+    t0 = time.perf_counter()
+    sess.evolve(gens)
+    run_s = time.perf_counter() - t0
+
+    rec = {
+        "bench": "stream",
+        "backend": "jnp",
+        "pop": pop,
+        "rows": rows,
+        "feats": feats,
+        "chunk_rows": chunk_rows,
+        "n_chunks": sess._stream.n_chunks,
+        "depth": depth,
+        "generations": gens,
+        "warm_s": round(run_s, 4),
+        "generations_per_sec": round(gens / run_s, 4),
+        "rows_evals_per_sec": round(gens * pop * rows / run_s, 1),
+        "best_fitness": float(sess.best_fitness),
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+        "machine": platform.machine(),
+    }
+    if rows <= 2_000_000:
+        X = np.concatenate([b[0] for b in source()])
+        y = np.concatenate([b[1] for b in source()])
+        mono = GPSession(pop_size=pop, max_depth=depth, n_consts=8,
+                         kernel="mse", backend="jnp", generations=gens)
+        mono.ingest(X, y)
+        mono.init(key=jax.random.PRNGKey(seed))
+        mono.step()
+        t0 = time.perf_counter()
+        mono.evolve(gens)
+        mono_s = time.perf_counter() - t0
+        diff = max(abs(a - b) / max(abs(a), 1e-9)
+                   for a, b in zip(sess.history, mono.history))
+        rec.update(monolithic_s=round(mono_s, 4),
+                   stream_overhead=round(run_s / mono_s, 3),
+                   history_rel_diff=float(diff))
+    return rec
+
+
 BENCHES = {"loop": bench_loop, "islands": bench_islands,
-           "service": bench_service, "eval": bench_eval}
+           "service": bench_service, "eval": bench_eval,
+           "stream": bench_stream}
 
 
 def main():
@@ -288,6 +360,8 @@ def main():
     ap.add_argument("--pop", type=int, default=None)
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--gens", type=int, default=GENS)
+    ap.add_argument("--chunk-rows", type=int, default=None,
+                    help="stream bench: rows per fixed-shape chunk")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     kw = dict(gens=args.gens)
@@ -295,6 +369,8 @@ def main():
         kw["pop"] = args.pop
     if args.rows is not None:
         kw["rows"] = args.rows
+    if args.chunk_rows is not None:
+        kw["chunk_rows"] = args.chunk_rows
     rec = BENCHES[args.bench](**kw)
     out = args.out or f"BENCH_{args.bench}.json"
     with open(out, "w") as f:

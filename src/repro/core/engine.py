@@ -707,10 +707,14 @@ def build_tenant_block(spec: TreeSpec, kernels: tuple, tourn_draw: int,
 # --- mesh-sharded step --------------------------------------------------------
 
 
-def _reduce_moments_on_mesh(kern, fit_spec, partial_m, y, weight, data_axis,
-                            n_data: int):
-    """Complete phase 1 across the mesh data axis and finalize: per-shard
-    moment partials f32[P*, M] → fitness f32[P*] (replicated).
+def _merge_moments_on_mesh(kern, fit_spec, partial_m, y, weight, data_axis,
+                           n_data: int):
+    """Complete phase 1 across the mesh data axis WITHOUT finalizing:
+    per-shard moment partials f32[P*, M] → globally merged moments
+    f32[P*, M], replicated on every data shard. `_reduce_moments_on_mesh`
+    finalizes for the generation step; the streaming fold
+    (`build_stream_fold`) instead merges each chunk's result into a
+    carried accumulator and finalizes once at end of stream.
 
     Three lowerings, picked by the kernel's protocol surface:
 
@@ -729,13 +733,11 @@ def _reduce_moments_on_mesh(kern, fit_spec, partial_m, y, weight, data_axis,
     """
     if kern.combine_moments is None:
         if not kern.y_moment_idx:
-            return kern.reduce_moments(jax.lax.psum(partial_m, data_axis),
-                                       fit_spec)
+            return jax.lax.psum(partial_m, data_axis)
         t_idx = jnp.asarray(kern.tree_moment_idx)
         tree_m = jax.lax.psum(partial_m[..., t_idx], data_axis)
         y_m = jax.lax.psum(kern.y_moments(y, weight, fit_spec), data_axis)
-        return kern.reduce_moments(fit.scatter_tree_y(kern, tree_m, y_m),
-                                   fit_spec)
+        return fit.scatter_tree_y(kern, tree_m, y_m)
     if kern.y_moment_idx:
         t_idx = jnp.asarray(kern.tree_moment_idx)
         # row 0's y-columns == every row's (tree-independent by contract)
@@ -747,8 +749,17 @@ def _reduce_moments_on_mesh(kern, fit_spec, partial_m, y, weight, data_axis,
     else:
         gathered = jax.lax.all_gather(partial_m, data_axis)
         parts = [gathered[s] for s in range(n_data)]
-    return kern.reduce_moments(fit.fold_moment_partials(kern, parts, fit_spec),
-                               fit_spec)
+    return fit.fold_moment_partials(kern, parts, fit_spec)
+
+
+def _reduce_moments_on_mesh(kern, fit_spec, partial_m, y, weight, data_axis,
+                            n_data: int):
+    """Complete phase 1 across the mesh data axis and finalize: per-shard
+    moment partials f32[P*, M] → fitness f32[P*] (replicated). See
+    `_merge_moments_on_mesh` for the three reduction lowerings."""
+    return kern.reduce_moments(
+        _merge_moments_on_mesh(kern, fit_spec, partial_m, y, weight,
+                               data_axis, n_data), fit_spec)
 
 
 def _sharded_step_builder(cfg: GPConfig, mesh, *, data_axis="data",
@@ -1044,3 +1055,88 @@ def sharded_evolve_block(cfg: GPConfig, mesh, *, n_steps: int, data_axis="data",
     )
     return smapped, dict(state=state_specs, X=data_spec, y=y_spec, weight=w_spec,
                          limit=P(), history=hist_spec)
+
+
+# --- streaming chunked fitness ------------------------------------------------
+
+
+def _stream_kernel(cfg: GPConfig):
+    kern = fit.get_kernel(cfg.fitness.kernel)
+    if kern.moments is None:
+        raise ValueError(
+            f"fitness kernel {kern.name!r} defines no moment pass "
+            f"(moments/reduce_moments), so it cannot accumulate across data "
+            f"chunks; register it through the two-pass protocol "
+            f"(see docs/fitness-kernels.md) or evaluate monolithic")
+    return kern
+
+
+def chunked_moments(cfg: GPConfig, op, arg, dataset, const_table=None, *,
+                    impl: str | None = None):
+    """Phase-1 moments of the WHOLE streamed dataset: fold every chunk of
+    `dataset` (a `data/loader.ChunkedDataset`, or any iterable of
+    fixed-shape `(X_fm, y, weight)` chunks) into an f32[P, M] accumulator
+    via the backend's `stream_moments` — one fixed-shape jitted dispatch
+    per chunk, so peak device footprint is ONE chunk plus the
+    accumulator, independent of total rows. The fold seeds with zeros
+    (the kernel-merge identity by contract) and the host drives the chunk
+    loop; finalize with `chunked_fitness` or `reduce_moments`."""
+    from repro.gp.backends import get_backend
+
+    backend = get_backend(impl or cfg.eval_impl)
+    kern = _stream_kernel(cfg)
+    if backend.stream_moments is None:
+        raise ValueError(f"eval backend {backend.name!r} exposes no "
+                         f"stream_moments pass and cannot fold data chunks")
+    if const_table is None:
+        const_table = cfg.tree_spec.const_table()
+    acc = jnp.zeros((op.shape[0], kern.n_moments), jnp.float32)
+    for X, y, weight in dataset:
+        acc = backend.stream_moments(acc, op, arg, X, y, const_table,
+                                     cfg.tree_spec, cfg.fitness, weight=weight,
+                                     data_tile=cfg.data_tile)
+    return acc
+
+
+def chunked_fitness(cfg: GPConfig, op, arg, dataset, const_table=None, *,
+                    impl: str | None = None):
+    """f32[P] fitness of every tree against a chunked data stream:
+    `chunked_moments` folded over the chunks, finalized ONCE by the
+    kernel's `reduce_moments`. Parity with the monolithic paths is pinned
+    by tests/test_stream.py — bitwise for decomposable kernels (their
+    merge is an exact weighted sum of per-point terms), ≤1e-4 for the
+    centered-moment kernels (pearson/r2), for ANY chunking including a
+    ragged zero-weight-padded final chunk."""
+    kern = _stream_kernel(cfg)
+    m = chunked_moments(cfg, op, arg, dataset, const_table, impl=impl)
+    return kern.reduce_moments(jnp.asarray(m), cfg.fitness)
+
+
+def build_stream_fold(cfg: GPConfig, mesh, *, data_axis: str = "data"):
+    """Jitted mesh fold step for streaming chunks, composing chunking
+    with the data-axis shard: `fold(acc, op, arg, X, y, weight) -> acc`
+    with `acc`/`op`/`arg` replicated and the chunk's `X [F, Dc]` /
+    `y [Dc]` / `weight [Dc]` sharded on `data_axis` (Dc % data == 0 —
+    `GPSession.ingest` rounds `chunk_rows` up). Each call completes
+    phase 1 for its chunk across the mesh (`_merge_moments_on_mesh`:
+    psum / hoisted psum / gather+combine, matching the generation step's
+    reduction semantics) and merges the replicated result into the
+    carried accumulator; finalize the final accumulator once with the
+    kernel's `reduce_moments`."""
+    kern = _stream_kernel(cfg)
+    n_data = mesh.shape[data_axis]
+
+    def fold(acc, op, arg, X, y, weight):
+        const_table = cfg.tree_spec.const_table()
+        partial_m = _eval_moments(cfg, op, arg, X, y, weight, const_table)
+        merged = _merge_moments_on_mesh(kern, cfg.fitness, partial_m, y,
+                                        weight, data_axis, n_data)
+        return kern.merge_moments(acc, merged, cfg.fitness)
+
+    smapped = compat.shard_map(
+        fold, mesh=mesh,
+        in_specs=(P(), P(), P(), P(None, data_axis), P(data_axis),
+                  P(data_axis)),
+        out_specs=P(),
+    )
+    return jax.jit(smapped)

@@ -303,7 +303,7 @@ _PEARSON_Y_IDX = (0, 2, 4)  # n, ȳ, M2y — tree-independent
 def _pearson_partial(preds, y, w, spec):
     """Exact centered single-pass 1 - r² (whole dataset in one call)."""
     w_ = w[None, :]
-    n = jnp.maximum(w.sum(), 1.0)
+    n = _mean_divisor(w.sum())
     p0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
     mx = (p0 * w_).sum(-1, keepdims=True) / n
     my = (y[None, :] * w_).sum(-1, keepdims=True) / n
@@ -318,10 +318,18 @@ def _pearson_partial(preds, y, w, spec):
     return jnp.where(jnp.isnan(out), jnp.inf, out)
 
 
+def _mean_divisor(n):
+    """Safe divisor for a weighted mean: n itself whenever there is ANY
+    weight (fractional sample weights included — `maximum(n, 1)` would
+    silently shrink the mean for 0 < Σw < 1), 1.0 only for the empty
+    (all-padding) case where the numerator is an exact 0.0 anyway."""
+    return jnp.where(n > 0, n, 1.0)
+
+
 def _y_center_moments(y, w, spec):
     """f32[3] tree-independent centered target moments: [Σw, ȳ, M2y]."""
     n = w.sum()
-    my = (y * w).sum() / jnp.maximum(n, 1.0)
+    my = (y * w).sum() / _mean_divisor(n)
     dy = y - my
     m2y = (dy * w * dy).sum()
     return jnp.stack([n, my, m2y])
@@ -330,7 +338,7 @@ def _y_center_moments(y, w, spec):
 def _pearson_moments(preds, y, w, spec):
     nym = _y_center_moments(y, w, spec)
     n, my = nym[0], nym[1]
-    nz = jnp.maximum(n, 1.0)
+    nz = _mean_divisor(n)
     w_ = jnp.broadcast_to(w[None, :], preds.shape)
     x0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
     mx = (x0 * w_).sum(-1) / nz  # [P]
@@ -351,7 +359,7 @@ def _chan_merge(n1, mean1, m2_1, n2, mean2, m2_2):
     Zero-count partials are exact identities (δ·n2/n selects the other
     side's mean; the M2 cross term vanishes)."""
     n = n1 + n2
-    nz = jnp.maximum(n, 1.0)
+    nz = _mean_divisor(n)
     delta = mean2 - mean1
     mean = mean1 + delta * n2 / nz
     m2 = m2_1 + m2_2 + delta * delta * n1 * n2 / nz
@@ -383,7 +391,7 @@ _VAR_NOISE_FLOOR = 256 * 1.1920929e-07  # 256 * f32 machine epsilon
 
 
 def _pearson_reduce(m, spec):
-    n = jnp.maximum(m[..., 0], 1.0)
+    n = _mean_divisor(m[..., 0])
     mx, my = m[..., 1], m[..., 2]
     # centered M2 never cancels, but clamp defensively at 0
     var_x = jnp.maximum(m[..., 3], 0.0) / n
@@ -411,7 +419,7 @@ _R2_Y_IDX = (0, 1, 2)  # n, ȳ, M2y — tree-independent
 def _r2_partial(preds, y, w, spec):
     """Exact centered single-pass 1 - R² (whole dataset in one call)."""
     w_ = w[None, :]
-    n = jnp.maximum(w.sum(), 1.0)
+    n = _mean_divisor(w.sum())
     p0 = jnp.where(jnp.isfinite(preds), preds, 0.0)
     my = (y[None, :] * w_).sum(-1, keepdims=True) / n
     ss_tot = jnp.maximum((jnp.square(y[None, :] - my) * w_).sum(-1), 1e-12)

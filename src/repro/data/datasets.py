@@ -80,4 +80,33 @@ def ligo_glitch(rows: int = 4_000, feats: int = 1_373, seed: int = 2):
     return X, y, {"kernel": "c", "n_classes": 2}
 
 
+def stream_rows(rows: int = 5_500_000, feats: int = 8, *, seed: int = 0,
+                block_rows: int = 65_536):
+    """Paper-scale synthetic regression stream: a CALLABLE yielding
+    `(X [n, feats], y [n])` row blocks totalling `rows`, for the
+    streaming-chunked-fitness path (`GPSession.ingest(stream=...)`).
+    Nothing is ever materialized beyond one block.
+
+    Deterministic for a given seed REGARDLESS of block_rows: blocks are
+    drawn sequentially from one `np.random.RandomState`, whose state
+    (gauss cache included) carries across block boundaries — so a
+    chunked pass and a monolithic pass see the very same rows, which is
+    what the chunking-invariance tests compare against."""
+    if feats < 4:
+        raise ValueError(f"stream_rows target uses features 0-3; feats={feats}")
+
+    def blocks():
+        rng = np.random.RandomState(seed)
+        done = 0
+        while done < rows:
+            n = min(block_rows, rows - done)
+            X = rng.randn(n, feats).astype(np.float32)
+            y = (X[:, 0] * X[:, 1] + np.sin(X[:, 2])
+                 - 0.5 * np.abs(X[:, 3])).astype(np.float32)
+            yield X, y
+            done += n
+
+    return blocks
+
+
 BY_NAME = {"kepler": kepler, "iris": iris, "kat7": kat7, "ligo": ligo_glitch}

@@ -39,6 +39,17 @@ class EvalBackend:
               `FitnessKernel.reduce_moments`; backends without a moment
               pass (None) cannot evaluate under a data-sharded mesh.
 
+    stream_moments: (acc[P, M], op, arg, X, y, const_table, tree_spec,
+              fit_spec, weight=None, data_tile=...) -> f32[P, M] — one
+              streaming fold step: this chunk's phase-1 moments merged
+              into the running accumulator via the kernel's merge. Seed
+              with zeros (the merge identity), fold every fixed-shape
+              chunk of a `data/loader.ChunkedDataset`, finalize once
+              with `FitnessKernel.reduce_moments` — how a dataset larger
+              than device memory evaluates in bounded memory. None means
+              the backend cannot stream (fall back to `moments` + a host
+              merge, or reject).
+
     `weight` is an optional f32[D] dataset-padding mask (0.0 on padded
     points) — every backend must score a padded dataset identically to
     the unpadded one. `jittable` backends run inside the engine's jitted
@@ -50,6 +61,7 @@ class EvalBackend:
     evaluate: Callable
     fitness: Callable
     moments: Callable = None
+    stream_moments: Callable = None
     jittable: bool = True
     supports_topology: bool = True
     fused_fitness: bool = False  # evaluation+reduction in one kernel
@@ -138,6 +150,24 @@ def _pallas_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None
                         weight=weight, data_tile=data_tile)
 
 
+def _jnp_stream_moments(acc, op, arg, X, y, const_table, tree_spec, fit_spec,
+                        weight=None, data_tile=1024):
+    from repro.kernels import ops as kops
+
+    return kops.stream_moments(acc, op, arg, X, y, const_table, tree_spec,
+                               fit_spec, weight=weight, data_tile=data_tile,
+                               impl="jnp")
+
+
+def _pallas_stream_moments(acc, op, arg, X, y, const_table, tree_spec, fit_spec,
+                           weight=None, data_tile=1024):
+    from repro.kernels import ops as kops
+
+    return kops.stream_moments(acc, op, arg, X, y, const_table, tree_spec,
+                               fit_spec, weight=weight, data_tile=data_tile,
+                               impl="pallas")
+
+
 def _scalar_evaluate(op, arg, X, const_table, tree_spec):
     from repro.core.scalar_eval import evaluate_population_scalar
 
@@ -171,6 +201,19 @@ def _scalar_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None
     w = None if weight is None else np.asarray(weight, np.float32)
     return np.asarray(moments_from_preds(preds, np.asarray(y, np.float32),
                                          fit_spec, weight=w))
+
+
+def _scalar_stream_moments(acc, op, arg, X, y, const_table, tree_spec, fit_spec,
+                           weight=None, data_tile=1024):
+    # host fold: scalar evaluation of the chunk, then the kernel's merge —
+    # the streaming contract holds on the paper-faithful baseline too
+    from repro.core.fitness import get_kernel
+
+    m = _scalar_moments(op, arg, X, y, const_table, tree_spec, fit_spec,
+                        weight=weight)
+    kern = get_kernel(fit_spec.kernel)
+    return np.asarray(kern.merge_moments(np.asarray(acc, np.float32), m,
+                                         fit_spec))
 
 
 @functools.lru_cache(maxsize=64)
@@ -218,13 +261,15 @@ def host_next_generation_islands(tree_spec, island_cfg, mix, tourn_size: int,
 
 register_backend(EvalBackend(
     name="jnp", evaluate=_jnp_evaluate, fitness=_jnp_fitness,
-    moments=_jnp_moments,
+    moments=_jnp_moments, stream_moments=_jnp_stream_moments,
     description="vectorized XLA level-sweep (paper's *-CPU_TF)"))
 register_backend(EvalBackend(
     name="pallas", evaluate=_jnp_evaluate, fitness=_pallas_fitness,
-    moments=_pallas_moments, fused_fitness=True,
+    moments=_pallas_moments, stream_moments=_pallas_stream_moments,
+    fused_fitness=True,
     description="fused eval+fitness Pallas TPU kernel (interpret off-TPU)"))
 register_backend(EvalBackend(
     name="scalar", evaluate=_scalar_evaluate, fitness=_scalar_fitness,
-    moments=_scalar_moments, jittable=False, supports_topology=False,
+    moments=_scalar_moments, stream_moments=_scalar_stream_moments,
+    jittable=False, supports_topology=False,
     description="paper-faithful per-data-point interpreter (1-CPU_SP)"))

@@ -22,7 +22,8 @@ class _SymbolicBase:
                  stop_fitness: float | None = None, backend: str | None = None,
                  topology=None, checkpoint_dir: str | None = None,
                  random_state: int = 0, warm_start: bool = False,
-                 block_size: int | None = None, islands: int = 1,
+                 block_size: int | None = None, chunk_rows: int | None = None,
+                 islands: int = 1,
                  migrate_every: int = 10, migrate_k: int = 4,
                  island_topology: str = "ring", island_mixes=None):
         self.pop_size = pop_size
@@ -42,6 +43,10 @@ class _SymbolicBase:
         # generations per device-resident evolution block (None = whole run
         # in one dispatch, bounded by the checkpoint period when set)
         self.block_size = block_size
+        # streaming chunked fitness: evaluate fit() data as a fold over
+        # fixed chunk_rows-sized chunks instead of one device-resident
+        # array (None = monolithic) — docs/fitness-kernels.md#streaming
+        self.chunk_rows = chunk_rows
         # island-model layout: islands of pop_size trees each, periodic
         # elite migration, optional per-island operator mixes — see
         # docs/islands.md
@@ -72,7 +77,8 @@ class _SymbolicBase:
         self._key = jax.random.PRNGKey(self.random_state)
         return GPSession(backend=self.backend, topology=self.topology,
                          checkpoint_dir=self.checkpoint_dir,
-                         block_size=self.block_size, **overrides)
+                         block_size=self.block_size,
+                         chunk_rows=self.chunk_rows, **overrides)
 
     def fit(self, X, y):
         """Evolve on X [n_samples, n_features], y [n_samples]. Blocks

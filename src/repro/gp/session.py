@@ -160,7 +160,8 @@ class GPSession:
                  topology: "MeshTopology | object | None" = None,
                  checkpoint_dir: str | None = None, checkpoint_every: int = 10,
                  feature_names=None, callback=None, callback_every: int = 1,
-                 block_size: int | None = None, **overrides):
+                 block_size: int | None = None, chunk_rows: int | None = None,
+                 **overrides):
         explicit_features = (config is not None or "tree_spec" in overrides
                              or "n_features" in overrides)
         explicit_impl = config is not None or "eval_impl" in overrides
@@ -180,6 +181,11 @@ class GPSession:
         self._X = None
         self._y = None
         self._weight = None  # f32[D'] padding mask (mesh runs only)
+        # streaming chunked ingest: evaluate datasets larger than device
+        # memory by folding fixed-shape chunks (docs/fitness-kernels.md)
+        self._chunk_rows = chunk_rows  # default for ingest(chunk_rows=)
+        self._stream = None  # ChunkedDataset when ingest chunked
+        self._stream_fold = None  # jitted mesh fold (engine.build_stream_fold)
         self._n_rows = 0  # REAL (pre-padding) row count
         self._gen_host = 0  # host mirror of state.generation (no device read)
         self._gen_dirty = False  # mirror stale (raw evolve_block + stop_fitness)
@@ -274,8 +280,9 @@ class GPSession:
 
     # --- lifecycle -----------------------------------------------------------
 
-    def ingest(self, X, y, *, layout: str = "rows",
-               sample_weight=None) -> "GPSession":
+    def ingest(self, X=None, y=None, *, layout: str = "rows",
+               sample_weight=None, stream=None,
+               chunk_rows: int | None = None) -> "GPSession":
         """Load the dataset onto the session's devices. layout='rows' is
         sklearn-style [rows, features] float data (transposed to the
         paper's feature-major f32[F, D] Eq. 2 form internally);
@@ -290,7 +297,28 @@ class GPSession:
         count; sample weights compose with the mask) and X/y/weight are
         device_put sharded; single-device jittable backends get plain
         device arrays; host-only backends keep numpy. Synchronous host
-        work only — no device compute."""
+        work only — no device compute.
+
+        Streaming front door — datasets larger than device memory:
+        `chunk_rows=` (here or on the constructor) evaluates X/y as a
+        fold over fixed `[F, chunk_rows]` zero-weight-padded chunks, and
+        `stream=` accepts a `data/loader.ChunkedDataset`, a memmapped
+        array, or a callable/iterator of `(X, y[, weight])` row blocks.
+        Fitness parity with monolithic ingest is pinned (bitwise for
+        decomposable kernels, ≤1e-4 for pearson/r2); evolution advances
+        one generation per host-driven chunk fold, so peak device
+        footprint is ONE chunk regardless of total rows. On a mesh each
+        chunk is sharded on the data axis (chunk_rows rounds up to a
+        multiple of it)."""
+        if stream is not None or chunk_rows is not None or (
+                self._chunk_rows is not None):
+            return self._ingest_stream(X, y, layout=layout,
+                                       sample_weight=sample_weight,
+                                       stream=stream, chunk_rows=chunk_rows)
+        self._stream = None
+        self._stream_fold = None
+        if X is None or y is None:
+            raise ValueError("ingest needs X and y (or stream=)")
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float32)
         if sample_weight is not None:
@@ -347,21 +375,70 @@ class GPSession:
         else:
             self._X, self._y = X_fm, y
             self._weight = sample_weight
+        self._invalidate_elite_cache()
+        return self
+
+    def _invalidate_elite_cache(self):
+        """New data invalidates the elite fitness cache (cached scores
+        were measured against the old dataset) — reset to the
+        never-matching init, so the next generation re-evaluates."""
         if self.state is not None and self.state.cache_fit.size:
-            # new data invalidates the elite fitness cache (cached scores
-            # were measured against the old dataset) — reset to the
-            # never-matching init, so the next generation re-evaluates
             self.state = self.state._replace(
                 cache_op=jnp.zeros_like(self.state.cache_op),
                 cache_arg=jnp.zeros_like(self.state.cache_arg),
                 cache_fit=jnp.full_like(self.state.cache_fit, jnp.inf))
+
+    def _ingest_stream(self, X, y, *, layout, sample_weight, stream,
+                       chunk_rows) -> "GPSession":
+        """Streaming half of `ingest`: wrap the source in a fixed-shape
+        `ChunkedDataset` (or adopt one), infer n_features from it, and
+        arm the per-generation chunk fold. On a mesh, `chunk_rows` rounds
+        up to a multiple of the data axis and `engine.build_stream_fold`
+        shards every chunk exactly like the monolithic step would."""
+        from repro.data.loader import ChunkedDataset
+
+        if stream is not None and X is not None:
+            raise ValueError("pass either X/y or stream=, not both")
+        chunk_rows = chunk_rows if chunk_rows is not None else self._chunk_rows
+        n_data = self.mesh.shape["data"] if self.mesh is not None else 1
+        if isinstance(stream, ChunkedDataset):
+            ds = stream
+            if chunk_rows is not None and int(chunk_rows) != ds.chunk_rows:
+                raise ValueError(f"chunk_rows={chunk_rows} conflicts with the "
+                                 f"ChunkedDataset's chunk_rows={ds.chunk_rows}")
+            if ds.chunk_rows % n_data:
+                raise ValueError(f"chunk_rows={ds.chunk_rows} must be a "
+                                 f"multiple of the mesh data axis ({n_data})")
+        else:
+            if chunk_rows is None:
+                raise ValueError("stream= needs chunk_rows= (constructor or "
+                                 "ingest keyword), or pass a ChunkedDataset")
+            rows = int(chunk_rows)
+            rows += (-rows) % n_data  # mesh: every chunk shards exactly
+            ds = ChunkedDataset(stream if stream is not None else X, y,
+                                chunk_rows=rows, layout=layout,
+                                sample_weight=sample_weight)
+        F = ds.n_features
+        spec = self._cfg.tree_spec
+        if spec.n_features != F:
+            if self._explicit_features:
+                raise ValueError(f"TreeSpec.n_features={spec.n_features} but "
+                                 f"the dataset has {F} features")
+            self._cfg = dataclasses.replace(
+                self._cfg, tree_spec=dataclasses.replace(spec, n_features=F))
+        self._stream = ds
+        self._X = self._y = self._weight = None
+        self._n_rows = ds.n_rows or 0
+        self._stream_fold = (engine.build_stream_fold(self._cfg, self.mesh)
+                             if self.mesh is not None else None)
+        self._invalidate_elite_cache()
         return self
 
     def init(self, *, key=None, seeds=None) -> "GPSession":
         """Fresh state (or checkpoint restore when a checkpoint_dir holds
         one). `seeds` are expression strings — Karoo's customized seed
         populations, parsed against the session's TreeSpec."""
-        if self._X is None:
+        if self._X is None and self._stream is None:
             raise ValueError("no dataset — call ingest()/fit() first")
         key = key if key is not None else jax.random.PRNGKey(0)
         self.state = engine.init_state(self._cfg, key, seeds=seeds,
@@ -430,7 +507,12 @@ class GPSession:
         (benchmarks/) see pure step throughput."""
         if self.state is None:
             self.init()
-        if self._step_fn is not None:
+        if self._stream is not None:
+            # streamed datasets fold chunk-by-chunk on the host loop —
+            # every backend and layout, mesh included (the fold shards
+            # each chunk on the data axis)
+            self.state = self._host_step(self.state)
+        elif self._step_fn is not None:
             with compat.set_mesh(self.mesh):
                 self.state = self._step_fn(self.state, self._X, self._y,
                                            self._weight)
@@ -463,6 +545,11 @@ class GPSession:
         generation bookkeeping."""
         if self.state is None:
             self.init()
+        if self._stream is not None:
+            raise ValueError("streamed/chunked datasets advance one generation "
+                             "per host-driven chunk fold; evolution blocks "
+                             "need a device-resident dataset (drive the run "
+                             "with evolve() instead)")
         if not self._backend.jittable:
             raise ValueError(f"backend {self._backend.name!r} is host-only; "
                              f"evolution blocks need a jittable backend")
@@ -483,6 +570,44 @@ class GPSession:
                 jnp.asarray(limit, jnp.int32), n_steps=n_steps)
         return self.state, history
 
+    def _eval_rows(self, op, arg):
+        """Host-side fitness of genome rows [R, N] -> np.f32[R] against the
+        session dataset — monolithic (one backend call) or streamed (a
+        chunk fold over `self._stream`, finalized once). The streaming
+        path composes with a mesh: each chunk is placed with the data-axis
+        sharding and folded through the shard_map'd program from
+        engine.build_stream_fold, so the reduction semantics match the
+        device generation step exactly."""
+        cfg = self._cfg
+        if self._stream is None:
+            return np.asarray(self._backend.fitness(
+                np.asarray(op), np.asarray(arg),
+                self._X, self._y, np.asarray(cfg.tree_spec.const_table()),
+                cfg.tree_spec, cfg.fitness, weight=self._weight,
+                data_tile=cfg.data_tile), np.float32)
+        kern = fit.get_kernel(cfg.fitness.kernel)
+        op, arg = jnp.asarray(op), jnp.asarray(arg)
+        if self._stream_fold is not None:
+            from jax.sharding import NamedSharding
+            from jax.sharding import PartitionSpec as P
+
+            sh_X = NamedSharding(self.mesh, P(None, "data"))
+            sh_y = NamedSharding(self.mesh, P("data"))
+            acc = jnp.zeros((op.shape[0], kern.n_moments), jnp.float32)
+            with compat.set_mesh(self.mesh):
+                for X, y, w in self._stream:
+                    acc = self._stream_fold(acc, op, arg,
+                                            jax.device_put(X, sh_X),
+                                            jax.device_put(y, sh_y),
+                                            jax.device_put(w, sh_y))
+            fitness = kern.reduce_moments(acc, cfg.fitness)
+        else:
+            fitness = engine.chunked_fitness(cfg, op, arg, self._stream,
+                                             impl=self._backend.name)
+        if self._stream.n_rows is not None:
+            self._n_rows = self._stream.n_rows
+        return np.asarray(fitness, np.float32)
+
     def _host_step(self, state: GPState) -> GPState:
         """Generation loop body for non-jittable (host) backends — same
         contract as engine.evolve_step, with evaluation on the host. The
@@ -496,13 +621,7 @@ class GPSession:
         cfg = self._cfg
         if cfg.island.islands > 1:
             return self._host_step_islands(state)
-
-        def eval_rows(op, arg):
-            return np.asarray(self._backend.fitness(
-                np.asarray(op), np.asarray(arg),
-                self._X, self._y, np.asarray(cfg.tree_spec.const_table()),
-                cfg.tree_spec, cfg.fitness, weight=self._weight,
-                data_tile=cfg.data_tile), np.float32)
+        eval_rows = self._eval_rows
 
         # host mirror of engine._cached_fitness: exact genome match on the
         # elite head skips its re-evaluation (bitwise-identical — cached
@@ -553,13 +672,7 @@ class GPSession:
         I, P, N = state.op.shape
         op2 = np.asarray(state.op).reshape(I * P, N)
         arg2 = np.asarray(state.arg).reshape(I * P, N)
-
-        def eval_rows(o2, a2):
-            return np.asarray(self._backend.fitness(
-                o2, a2, self._X, self._y,
-                np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec,
-                cfg.fitness, weight=self._weight, data_tile=cfg.data_tile),
-                np.float32)
+        eval_rows = self._eval_rows
 
         # one ALL-islands hit gate, mirroring engine._island_step_body
         E = state.cache_op.shape[1]
@@ -689,7 +802,7 @@ class GPSession:
             self.init()
         cfg = self._cfg
         total = generations if generations is not None else cfg.generations
-        if not self._backend.jittable:
+        if not self._backend.jittable or self._stream is not None:
             self._evolve_host(total)
         else:
             self._resync_gen()

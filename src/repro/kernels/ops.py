@@ -149,6 +149,34 @@ def moments(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSp
 
 @partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
                                    "gather", "impl", "interpret"))
+def stream_moments(acc, op, arg, X, y, const_table, tree_spec: TreeSpec,
+                   fit_spec: FitnessSpec, *, weight=None, data_tile: int = 1024,
+                   pop_tile: int = 8, gather: str | None = None,
+                   impl: str = "pallas", interpret: bool | None = None):
+    """One streaming fold step, ONE dispatch: phase-1 moments of this
+    data chunk merged into the running f32[P, M] accumulator `acc` via
+    the kernel's merge (elementwise sum, or `combine_moments`). Seed the
+    fold with zeros — the merge identity by contract — and finalize the
+    final accumulator once with `reduce_moments`. Every chunk of a
+    `data/loader.ChunkedDataset` has the same fixed shape, so the whole
+    stream re-enters this one compiled program."""
+    from repro.core.fitness import get_kernel
+
+    kern = get_kernel(fit_spec.kernel)
+    if kern.moments is None:
+        raise ValueError(f"fitness kernel {fit_spec.kernel!r} defines no moment "
+                         f"pass; it cannot accumulate across data chunks")
+    if impl == "jnp":
+        m = _ref.moments_ref_tiled(op, arg, X, y, const_table, tree_spec,
+                                   fit_spec, weight=weight)
+    else:
+        m = _moments_padded(op, arg, X, y, const_table, tree_spec, fit_spec,
+                            weight, data_tile, pop_tile, gather, interpret)
+    return kern.merge_moments(acc, m, fit_spec)
+
+
+@partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
+                                   "gather", "impl", "interpret"))
 def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
             *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
             gather: str | None = None, impl: str = "pallas",

@@ -48,7 +48,7 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
                 ckpt_dir: str | None = None, ckpt_every: int = 10,
                 seeds=None, archive_every: int = 1, islands: int = 1,
                 migrate_every: int = 10, migrate_k: int = 4,
-                island_topology: str = "ring"):
+                island_topology: str = "ring", chunk_rows: int | None = None):
     """One archived GP run on a named dataset through the GPSession door.
 
     `archive_every` is the callback (= evolution-block) period: the run
@@ -61,7 +61,7 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
               backend=backend, topology=topology,
               checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every,
               islands=islands, migrate_every=migrate_every, migrate_k=migrate_k,
-              island_topology=island_topology)
+              island_topology=island_topology, chunk_rows=chunk_rows)
     if fn_set != "auto":
         kw["fn_set"] = fn_set
     history = []
@@ -125,6 +125,10 @@ def main():
     ap.add_argument("--island-topology", default="ring",
                     choices=["ring", "torus", "broadcast-best"],
                     help="migration routing between islands")
+    ap.add_argument("--chunk-rows", type=int, default=None,
+                    help="streaming chunked fitness: evaluate the dataset as "
+                         "a fold over fixed-size chunks (bounded device "
+                         "memory; None = monolithic)")
     args = ap.parse_args()
     run_dataset(args.dataset, generations=args.generations, pop=args.pop,
                 depth=args.depth, backend=args.backend,
@@ -132,7 +136,8 @@ def main():
                 seed=args.seed, ckpt_dir=args.ckpt_dir, seeds=args.seed_exprs,
                 archive_every=args.archive_every, islands=args.islands,
                 migrate_every=args.migrate_every, migrate_k=args.migrate_k,
-                island_topology=args.island_topology)
+                island_topology=args.island_topology,
+                chunk_rows=args.chunk_rows)
 
 
 if __name__ == "__main__":

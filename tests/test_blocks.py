@@ -320,6 +320,7 @@ _SUBPROCESS_MESH_BLOCKS = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_mesh_blocks_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

@@ -106,6 +106,7 @@ _ELASTIC = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_elastic_reshard_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)
@@ -165,6 +166,7 @@ _ELASTIC_GP = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_elastic_gp_reshard_subprocess():
     """A GPState from an islands=4 run saved on a (2,2,2) mesh restores
     and resharded onto a (2,1,4) mesh bit-identically — champion

@@ -1,8 +1,10 @@
 """Datasets + loader."""
 import numpy as np
+import pytest
 
 from repro.data.datasets import iris, kat7, kepler, ligo_glitch
-from repro.data.loader import feature_major, lm_batches, pad_rows
+from repro.data.loader import (feature_major, lm_batches, pad_feature_major,
+                               pad_rows)
 
 
 def test_shapes_match_paper_table3():
@@ -34,6 +36,45 @@ def test_pad_rows():
     y = np.ones((10,), np.float32)
     Xp, yp, w = pad_rows(X, y, 8)
     assert Xp.shape == (16, 3) and w.sum() == 10
+
+
+@pytest.mark.parametrize("bad", [0, -1, -8, 2.5, "4", None])
+def test_pad_multiple_validated(bad):
+    """multiple <= 0 (or a non-int) used to fall through silently — e.g.
+    `(-D) % 0` raises a bare ZeroDivisionError and negative multiples
+    produced nonsense pads. Both pad doors must reject it up front."""
+    X = np.ones((4, 2), np.float32)
+    y = np.ones(4, np.float32)
+    with pytest.raises(ValueError, match="positive integer"):
+        pad_rows(X, y, bad)
+    with pytest.raises(ValueError, match="positive integer"):
+        pad_feature_major(np.ascontiguousarray(X.T), y, bad)
+
+
+def test_pad_rows_already_multiple():
+    X = np.ones((8, 2), np.float32)
+    y = np.ones(8, np.float32)
+    Xp, yp, w = pad_rows(X, y, 4)
+    assert Xp.shape == (8, 2) and w.tolist() == [1.0] * 8
+    Xf, yf, wf = pad_feature_major(np.ascontiguousarray(X.T), y, 4)
+    assert Xf.shape == (2, 8) and wf.tolist() == [1.0] * 8
+
+
+def test_pad_rows_empty():
+    Xp, yp, w = pad_rows(np.zeros((0, 3), np.float32), np.zeros(0, np.float32), 4)
+    assert Xp.shape == (0, 3) and w.shape == (0,)
+
+
+def test_pad_rows_weight_passthrough():
+    """Explicit sample weights survive on the real rows; padding rows are
+    always 0.0 regardless."""
+    X = np.ones((5, 2), np.float32)
+    y = np.ones(5, np.float32)
+    sw = np.array([0.5, 2.0, 1.0, 0.25, 3.0], np.float32)
+    Xp, yp, w = pad_rows(X, y, 4, weight=sw)
+    np.testing.assert_array_equal(w, [0.5, 2.0, 1.0, 0.25, 3.0, 0, 0, 0])
+    Xf, yf, wf = pad_feature_major(np.ascontiguousarray(X.T), y, 4, weight=sw)
+    np.testing.assert_array_equal(wf, w)
 
 
 def test_lm_batches_deterministic():

@@ -90,6 +90,7 @@ _SUBPROCESS_SHARDED = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_sharded_engine_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

@@ -362,6 +362,7 @@ _SUBPROCESS_TOPOLOGY = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_session_topology_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

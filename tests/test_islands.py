@@ -450,6 +450,7 @@ _SUBPROCESS_ISLAND_MESH = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_island_mesh_subprocess():
     env = dict(os.environ,
                PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -4,6 +4,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
 
 _SCRIPT = textwrap.dedent("""
     import os
@@ -47,6 +48,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_moe_sharded_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

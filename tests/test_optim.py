@@ -92,6 +92,7 @@ _COMPRESS_SUBPROCESS = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_compressed_psum_subprocess():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

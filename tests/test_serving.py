@@ -4,6 +4,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
 
 _SCRIPT = textwrap.dedent("""
     import os
@@ -42,6 +43,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_cp_decode_matches_reference():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

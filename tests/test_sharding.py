@@ -52,6 +52,7 @@ _SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.tier2
 def test_all_specs_legal_on_production_meshes():
     env = dict(os.environ, PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)

@@ -1,0 +1,431 @@
+"""Streaming chunked fitness — the chunking-invariance pins.
+
+The contract under test (docs/fitness-kernels.md#streaming): evaluating a
+dataset as a fold over fixed-shape zero-weight-padded chunks produces the
+same fitness as one monolithic evaluation —
+
+  * bitwise for decomposable kernels on integer-lattice data (all f32
+    partial sums are exact integers, so summation order cannot matter),
+  * ≤ 1e-4 relative for the Chan-combined kernels (pearson, r2),
+
+across backends, ragged final chunks, all-padded chunks, chunk sizes
+larger than the dataset, and (tier2) a mesh run that composes chunking
+with the data-axis shard. Hypothesis property tests pin the algebra the
+fold relies on: every registered kernel's merge is associative and has
+the zero moment as identity, under random splits of random *fractionally
+weighted* datasets (total weight < 1 included — the case the old
+`maximum(n, 1)` mean guard silently broke).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+from repro.core import engine
+from repro.core import fitness as fit
+from repro.data.datasets import stream_rows
+from repro.data.loader import ChunkedDataset
+from repro.gp import GPSession
+
+
+def _dataset(rows=500, feats=5, seed=0):
+    rng = np.random.RandomState(seed)
+    X = rng.randn(rows, feats).astype(np.float32)
+    y = (X[:, 0] * X[:, 1] + X[:, 2]).astype(np.float32)
+    return X, y
+
+
+def _lattice(rows=96, feats=4, seed=0, classes=None):
+    """Small-integer data: with fn_set +,-,* and p_const=0 every depth-3
+    prediction and every decomposable moment is an exact f32 integer well
+    under 2^24 — partial sums are order-independent, so chunked vs
+    monolithic must agree BITWISE."""
+    rng = np.random.RandomState(seed)
+    X = rng.randint(-2, 3, size=(rows, feats)).astype(np.float32)
+    if classes:
+        y = rng.randint(0, classes, size=rows).astype(np.float32)
+    else:
+        y = rng.randint(-2, 3, size=rows).astype(np.float32)
+    return X, y
+
+
+def _pair(kernel, backend, X, y, chunk_rows, *, seed=1, **kw):
+    """(monolithic fitness, streamed fitness) after one generation each,
+    from identical init keys — so both evaluate the same population."""
+    base = {"pop_size": 24, "max_depth": 4, "kernel": kernel,
+            "backend": backend, **kw}
+    sm = GPSession(**base)
+    sm.ingest(X, y)
+    sm.init(key=jax.random.PRNGKey(seed))
+    sm.step()
+    ss = GPSession(**base)
+    ss.ingest(X, y, chunk_rows=chunk_rows)
+    ss.init(key=jax.random.PRNGKey(seed))
+    ss.step()
+    return np.asarray(sm.state.fitness), np.asarray(ss.state.fitness)
+
+
+# --- parity grid: backend x kernel (ragged final chunk throughout) -----------
+
+
+GRID = ([("jnp", k) for k in ("mse", "c", "pearson", "r2")]
+        + [("pallas", k) for k in ("mse", "r2")]
+        + [("scalar", k) for k in ("mse", "pearson")])
+
+
+@pytest.mark.parametrize("backend,kernel", GRID)
+def test_stream_parity(backend, kernel):
+    X, y = _dataset(rows=500)  # 500 % 128 != 0: ragged final chunk
+    f_mono, f_stream = _pair(kernel, backend, X, y, 128)
+    np.testing.assert_allclose(f_mono, f_stream, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("genome", ["tree", "postfix"])
+def test_stream_parity_genomes(genome):
+    X, y = _dataset(rows=300)
+    f_mono, f_stream = _pair("mse", "jnp", X, y, 90, genome=genome)
+    np.testing.assert_allclose(f_mono, f_stream, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kernel", ["r", "c", "m"])
+def test_stream_bitwise_decomposable(kernel):
+    """Decomposable kernels on lattice data: chunked == monolithic, BITWISE,
+    for both exact and ragged chunk boundaries."""
+    X, y = _lattice(classes=3 if kernel == "c" else None)
+    for chunk in (32, 40):  # 96 % 32 == 0; 96 % 40 != 0
+        f_mono, f_stream = _pair(kernel, "jnp", X, y, chunk,
+                                 fn_set="add,sub,mul", p_const=0.0, max_depth=3)
+        np.testing.assert_array_equal(f_mono, f_stream)
+
+
+def test_chunk_rows_larger_than_dataset():
+    X, y = _dataset(rows=200)
+    f_mono, f_stream = _pair("mse", "jnp", X, y, 4096)
+    np.testing.assert_allclose(f_mono, f_stream, rtol=1e-5, atol=1e-6)
+
+
+def test_session_chunking_invariance():
+    """Two streamed runs with DIFFERENT chunk sizes produce identical
+    evolution histories on lattice data (fitness bitwise => identical
+    selection decisions)."""
+    X, y = _lattice(rows=120)
+    hist = []
+    for chunk in (16, 64):
+        s = GPSession(pop_size=24, max_depth=3, kernel="r", backend="jnp",
+                      fn_set="add,sub,mul", p_const=0.0)
+        s.ingest(X, y, chunk_rows=chunk)
+        s.init(key=jax.random.PRNGKey(7))
+        s.evolve(4)
+        hist.append(list(s.history))
+    assert hist[0] == hist[1]
+
+
+def test_stream_islands():
+    """Island-batched evolution composes with streaming (flattened [I*P]
+    eval rides the same chunk fold)."""
+    X, y = _dataset(rows=300)
+    s = GPSession(pop_size=16, max_depth=3, kernel="mse", backend="jnp",
+                  islands=3, migrate_every=2, migrate_k=2)
+    s.ingest(X, y, chunk_rows=128)
+    s.init(key=jax.random.PRNGKey(2))
+    s.evolve(3)
+    assert np.asarray(s.state.fitness).shape == (3, 16)
+    assert np.isfinite(np.min(np.asarray(s.state.best_fitness)))
+
+
+def test_stream_front_doors():
+    """constructor chunk_rows=, ingest(stream=callable), and a prebuilt
+    ChunkedDataset all route to the same fold."""
+    X, y = _dataset(rows=256)
+    s1 = GPSession(pop_size=16, max_depth=3, kernel="mse", backend="jnp",
+                   chunk_rows=64)
+    s1.ingest(X, y)
+    s1.init(key=jax.random.PRNGKey(0))
+    s1.step()
+
+    def blocks():
+        yield X, y
+
+    s2 = GPSession(pop_size=16, max_depth=3, kernel="mse", backend="jnp")
+    s2.ingest(stream=blocks, chunk_rows=64)
+    s2.init(key=jax.random.PRNGKey(0))
+    s2.step()
+    s3 = GPSession(pop_size=16, max_depth=3, kernel="mse", backend="jnp")
+    s3.ingest(stream=ChunkedDataset(X, y, chunk_rows=64))
+    s3.init(key=jax.random.PRNGKey(0))
+    s3.step()
+    f1 = np.asarray(s1.state.fitness)
+    np.testing.assert_allclose(f1, np.asarray(s2.state.fitness), rtol=1e-6)
+    np.testing.assert_allclose(f1, np.asarray(s3.state.fitness), rtol=1e-6)
+    with pytest.raises(ValueError, match="not both"):
+        s3.ingest(X, y, stream=blocks)
+    with pytest.raises(ValueError, match="chunk_rows"):
+        GPSession(pop_size=16, backend="jnp").ingest(stream=blocks)
+
+
+def test_stream_blocks_rejected():
+    """Device-resident evolution blocks need a monolithic dataset — the
+    streamed session must say so instead of failing downstream."""
+    X, y = _dataset(rows=200)
+    s = GPSession(pop_size=16, max_depth=3, kernel="mse", backend="jnp")
+    s.ingest(X, y, chunk_rows=64)
+    s.init(key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="chunk fold"):
+        s.evolve_block(4)
+
+
+# --- the fold algebra: merge identity + all-padded chunks --------------------
+
+
+def _moments(kernel, preds, y, w):
+    spec = fit.FitnessSpec(kernel=kernel)
+    return fit.moments_from_preds(jnp.asarray(preds), jnp.asarray(y), spec,
+                                  weight=jnp.asarray(w)), spec
+
+
+@pytest.mark.parametrize("kernel", fit.available_kernels())
+def test_all_padded_chunk_is_noop(kernel):
+    """Folding an all-zero-weight (fully padded) chunk leaves the
+    accumulator bitwise unchanged — the right-identity every streamed
+    ragged tail relies on."""
+    rng = np.random.RandomState(0)
+    preds = rng.randn(4, 32).astype(np.float32)
+    y = rng.randn(32).astype(np.float32)
+    kern = fit.get_kernel(kernel)
+    m, spec = _moments(kernel, preds, y, np.ones(32, np.float32))
+    m_pad, _ = _moments(kernel, rng.randn(4, 32).astype(np.float32),
+                        rng.randn(32).astype(np.float32),
+                        np.zeros(32, np.float32))
+    merged = kern.merge_moments(m, m_pad, spec)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(m))
+    # and the zero accumulator itself is the fold's seed identity
+    seeded = kern.merge_moments(jnp.zeros_like(m), m, spec)
+    np.testing.assert_allclose(np.asarray(seeded), np.asarray(m),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fractional_weight_mean_guard():
+    """Total weight < 1 (fractional sample weights): the mean divisors
+    must use the true Σw, not max(Σw, 1) — the merge of two half-weight
+    shards must match the whole-dataset moments."""
+    rng = np.random.RandomState(3)
+    preds = rng.randn(3, 8).astype(np.float32)
+    y = rng.randn(8).astype(np.float32)
+    w = np.full(8, 0.06, np.float32)  # Σw = 0.48 < 1
+    for kernel in ("pearson", "r2"):
+        kern = fit.get_kernel(kernel)
+        whole, spec = _moments(kernel, preds, y, w)
+        m1, _ = _moments(kernel, preds[:, :5], y[:5], w[:5])
+        m2, _ = _moments(kernel, preds[:, 5:], y[5:], w[5:])
+        merged = kern.merge_moments(m1, m2, spec)
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(whole),
+                                   rtol=1e-4, atol=1e-6, err_msg=kernel)
+
+
+# --- hypothesis: merge associativity + chunking invariance, every kernel -----
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(4, 64),
+       pop=st.integers(1, 4), n_cuts=st.integers(1, 4),
+       fractional=st.booleans())
+def test_merge_moments_properties(seed, rows, pop, n_cuts, fractional):
+    rng = np.random.RandomState(seed)
+    preds = (rng.randn(pop, rows) * 3).astype(np.float32)
+    y = rng.randn(rows).astype(np.float32)
+    w = rng.rand(rows).astype(np.float32)
+    if fractional:
+        w *= 0.9 / max(w.sum(), 1e-6)  # total weight < 1
+    bounds = sorted({0, rows, *rng.randint(1, rows, size=n_cuts)})
+    for kernel in fit.available_kernels():
+        kern = fit.get_kernel(kernel)
+        whole, spec = _moments(kernel, preds, y, w)
+        parts = [_moments(kernel, preds[:, a:b], y[a:b], w[a:b])[0]
+                 for a, b in zip(bounds, bounds[1:])]
+        fold_l = parts[0]
+        for p in parts[1:]:
+            fold_l = kern.merge_moments(fold_l, p, spec)
+        fold_r = parts[-1]
+        for p in parts[-2::-1]:
+            fold_r = kern.merge_moments(p, fold_r, spec)
+        # associativity: both fold orders agree (to f32 noise) ...
+        np.testing.assert_allclose(np.asarray(fold_l), np.asarray(fold_r),
+                                   rtol=1e-3, atol=1e-4, err_msg=kernel)
+        # ... and chunking is invariant on the REDUCED fitness
+        f_whole = np.asarray(kern.reduce_moments(whole, spec))
+        f_fold = np.asarray(kern.reduce_moments(fold_l, spec))
+        np.testing.assert_allclose(f_fold, f_whole, rtol=1e-4, atol=1e-4,
+                                   err_msg=kernel)
+        # zero moment is a bitwise right identity
+        z = jnp.zeros_like(fold_l)
+        np.testing.assert_array_equal(
+            np.asarray(kern.merge_moments(fold_l, z, spec)),
+            np.asarray(fold_l), err_msg=kernel)
+        # ... and a (1-ulp) left identity
+        np.testing.assert_allclose(
+            np.asarray(kern.merge_moments(z, fold_l, spec)),
+            np.asarray(fold_l), rtol=1e-6, atol=1e-7, err_msg=kernel)
+
+
+# --- engine-level fold + paper-scale generator -------------------------------
+
+
+def test_chunked_fitness_matches_backend():
+    """engine.chunked_fitness (the raw fold) == one monolithic backend
+    call, for a prebuilt ChunkedDataset with sample weights."""
+    from repro.gp import backends as B
+
+    X, y = _dataset(rows=400)
+    w = np.random.RandomState(5).rand(400).astype(np.float32)
+    s = GPSession(pop_size=16, max_depth=4, kernel="r2", backend="jnp")
+    s.ingest(X, y)
+    s.init(key=jax.random.PRNGKey(4))
+    op, arg = s.state.op, s.state.arg
+    cfg = s._cfg
+    mono = np.asarray(B.get_backend("jnp").fitness(
+        np.asarray(op), np.asarray(arg), np.ascontiguousarray(X.T), y,
+        np.asarray(cfg.tree_spec.const_table()), cfg.tree_spec, cfg.fitness,
+        weight=w))
+    ds = ChunkedDataset(X, y, chunk_rows=96, sample_weight=w)
+    streamed = np.asarray(engine.chunked_fitness(cfg, op, arg, ds, impl="jnp"))
+    np.testing.assert_allclose(mono, streamed, rtol=1e-4, atol=1e-4)
+
+
+def test_stream_rows_blocking_invariant():
+    """datasets.stream_rows yields THE SAME rows for any block size
+    (sequential RandomState draws) — what lets the bench compare chunked
+    against monolithic."""
+    a = np.concatenate([b[0] for b in stream_rows(rows=1000, block_rows=170)()])
+    b = np.concatenate([b[0] for b in stream_rows(rows=1000, block_rows=1000)()])
+    np.testing.assert_array_equal(a, b)
+    ya = np.concatenate([blk[1] for blk in stream_rows(rows=1000, block_rows=170)()])
+    assert a.shape == (1000, 8) and ya.shape == (1000,)
+    with pytest.raises(ValueError):
+        stream_rows(rows=10, feats=2)
+
+
+@pytest.mark.tier2
+def test_stream_large_bounded_memory():
+    """A 600k-row callable stream evolves with a peak device footprint of
+    ONE chunk; n_rows is discovered during the first fold."""
+    s = GPSession(pop_size=16, max_depth=3, kernel="mse", backend="jnp")
+    s.ingest(stream=stream_rows(rows=600_000, block_rows=65_536),
+             chunk_rows=131_072)
+    s.init(key=jax.random.PRNGKey(0))
+    s.evolve(2)
+    assert s._n_rows == 600_000
+    assert len(s.history) == 2 and np.isfinite(s.history[-1])
+
+
+# --- mesh composition (tier2 subprocess: 8 host devices) ---------------------
+
+
+_SUBPROCESS_MESH_STREAM = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from repro.gp import GPSession, MeshTopology
+
+    rng = np.random.RandomState(0)
+    X = rng.randn(1000, 5).astype(np.float32)
+    y = (X[:, 0] * X[:, 1] + X[:, 2]).astype(np.float32)
+    for kernel in ("mse", "r2"):
+        sm = GPSession(pop_size=32, max_depth=4, kernel=kernel,
+                       topology=MeshTopology(data=4, model=2))
+        sm.ingest(X, y, chunk_rows=300)  # 300 % 4 == 0; ragged tail too
+        sm.init(key=jax.random.PRNGKey(3))
+        sm.step()
+        ss = GPSession(pop_size=32, max_depth=4, kernel=kernel, backend="jnp")
+        ss.ingest(X, y)
+        ss.init(key=jax.random.PRNGKey(3))
+        ss.step()
+        np.testing.assert_allclose(
+            np.asarray(sm.state.fitness), np.asarray(ss.state.fitness),
+            rtol=1e-4, atol=1e-4, err_msg=kernel)
+    print("MESH_STREAM_OK")
+""")
+
+
+@pytest.mark.tier2
+def test_mesh_stream_subprocess():
+    """Chunking composes with the data-axis shard: a mesh streamed run
+    matches the single-device monolithic fitness."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_MESH_STREAM], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MESH_STREAM_OK" in r.stdout
+
+
+# --- ChunkedDataset unit behavior --------------------------------------------
+
+
+def test_chunked_dataset_sources(tmp_path):
+    X = np.arange(20, dtype=np.float32).reshape(10, 2)
+    y = np.arange(10, dtype=np.float32)
+
+    ds = ChunkedDataset(X, y, chunk_rows=4)
+    chunks = list(ds)
+    assert len(chunks) == 3 == ds.n_chunks and ds.n_rows == 10
+    Xc, yc, wc = chunks[-1]
+    assert Xc.shape == (2, 4) and wc.tolist() == [1, 1, 0, 0]
+    # replayable: a second pass yields identical chunks
+    again = list(ds)
+    np.testing.assert_array_equal(chunks[0][0], again[0][0])
+
+    # feature-major layout source
+    ds_fm = ChunkedDataset(np.ascontiguousarray(X.T), y, chunk_rows=4,
+                           layout="features")
+    np.testing.assert_array_equal(list(ds_fm)[1][0], chunks[1][0])
+
+    # one-shot iterator source: consumed once, cached for replay
+    it = iter([(X[:6], y[:6]), (X[6:], y[6:])])
+    ds_it = ChunkedDataset(it, chunk_rows=4)
+    np.testing.assert_array_equal(list(ds_it)[2][1], chunks[2][1])
+    np.testing.assert_array_equal(list(ds_it)[0][0], chunks[0][0])
+
+    # memmapped .npy source streams from disk
+    np.save(tmp_path / "x.npy", X)
+    np.save(tmp_path / "y.npy", y)
+    ds_np = ChunkedDataset.from_npy(tmp_path / "x.npy", tmp_path / "y.npy",
+                                    chunk_rows=4)
+    np.testing.assert_array_equal(list(ds_np)[0][0], chunks[0][0])
+
+
+def test_chunked_dataset_weights_and_errors():
+    X = np.ones((5, 3), np.float32)
+    y = np.zeros(5, np.float32)
+    w = np.arange(1, 6, dtype=np.float32)
+    Xc, yc, wc = next(iter(ChunkedDataset(X, y, chunk_rows=8, sample_weight=w)))
+    np.testing.assert_array_equal(wc, [1, 2, 3, 4, 5, 0, 0, 0])
+
+    with pytest.raises(ValueError, match="chunk_rows"):
+        ChunkedDataset(X, y, chunk_rows=0)
+    with pytest.raises(ValueError, match="layout"):
+        ChunkedDataset(X, y, chunk_rows=4, layout="cols")
+    with pytest.raises(ValueError, match="need y"):
+        ChunkedDataset(X, chunk_rows=4)
+    with pytest.raises(ValueError, match="does not match"):
+        ChunkedDataset(X, y[:3], chunk_rows=4)
+    with pytest.raises(ValueError, match="weights"):
+        ChunkedDataset(iter([(X, y, w[:5]), (X, y)]), chunk_rows=4)
+    with pytest.raises(ValueError, match="inside the blocks"):
+        ChunkedDataset(lambda: iter([(X, y)]), y, chunk_rows=4)
+
+
+def test_chunked_dataset_empty():
+    ds = ChunkedDataset(np.zeros((0, 3), np.float32),
+                        np.zeros(0, np.float32), chunk_rows=8)
+    chunks = list(ds)
+    assert len(chunks) == 1 and ds.n_rows == 0
+    Xc, yc, wc = chunks[0]
+    assert Xc.shape == (3, 8) and wc.sum() == 0.0
