@@ -56,26 +56,44 @@ GENS = 10
 
 
 def bench_loop(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
-               depth: int = 5, seed: int = 0) -> dict:
+               depth: int = 5, seed: int = 0, trace: str | None = None,
+               metrics: str | None = None) -> dict:
+    from repro.obs import Metrics, Tracer
+    from repro.obs.trace import NULL_TRACER
+
+    tracer = Tracer(trace) if trace else NULL_TRACER
+    mreg = Metrics(metrics) if metrics else None
     X_rows, y, meta = kat7(rows=rows)
     sess = GPSession(pop_size=pop, max_depth=depth, n_consts=8,
                      kernel=meta["kernel"], n_classes=meta["n_classes"],
-                     backend="jnp", generations=gens)
+                     backend="jnp", generations=gens,
+                     tracer=tracer if trace else None, metrics=mreg)
+    t0 = time.perf_counter()
     sess.ingest(X_rows, y)
-    sess.init(key=jax.random.PRNGKey(seed))
+    ingest_s = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    sess.evolve_block(gens)  # includes compile
+    sess.init(key=jax.random.PRNGKey(seed))
     jax.block_until_ready(sess.state.fitness)
-    compile_and_run_s = time.perf_counter() - t0
+    init_s = time.perf_counter() - t0
+
+    with tracer.span("bench:cold"):
+        t0 = time.perf_counter()
+        sess.evolve_block(gens)  # includes compile
+        jax.block_until_ready(sess.state.fitness)
+        compile_and_run_s = time.perf_counter() - t0
 
     sess.init(key=jax.random.PRNGKey(seed))
-    t0 = time.perf_counter()
-    _, history = sess.evolve_block(gens)
-    jax.block_until_ready(history)
-    run_s = time.perf_counter() - t0
+    with tracer.span("bench:warm"):
+        t0 = time.perf_counter()
+        _, history = sess.evolve_block(gens)
+        jax.block_until_ready(history)
+        run_s = time.perf_counter() - t0
 
-    return {
+    # fold the warm block's device telemetry stream into stats (one
+    # extra sync, OUTSIDE the timed regions)
+    st = sess.absorb_block_telemetry()
+    rec = {
         "bench": "loop",
         "backend": "jnp",
         "pop": pop,
@@ -84,15 +102,26 @@ def bench_loop(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
         "generations": gens,
         "block_dispatches": 1,
         "host_syncs_per_block": 1,
+        "ingest_s": round(ingest_s, 4),
+        "init_s": round(init_s, 4),
         "warm_s": round(run_s, 4),
         "cold_s": round(compile_and_run_s, 4),
         "generations_per_sec": round(gens / run_s, 4),
         "rows_evals_per_sec": round(gens * pop * rows / run_s, 1),
         "trees_rows_per_sec": round(gens * pop * rows / run_s, 1),
+        "cache_hit_rate": round(st["cache_hit_rate"], 4),
+        "cache_hits": st["cache_hits"],
+        "cache_queries": st["cache_queries"],
+        "tree_evals": st["tree_evals"],
         "jax": jax.__version__,
         "device": jax.devices()[0].platform,
         "machine": platform.machine(),
     }
+    if trace:
+        tracer.save()
+    if mreg is not None:
+        mreg.close()
+    return rec
 
 
 def bench_islands(*, pop: int = POP, rows: int = ROWS, gens: int = GENS,
@@ -363,6 +392,11 @@ def main():
     ap.add_argument("--chunk-rows", type=int, default=None,
                     help="stream bench: rows per fixed-shape chunk")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None,
+                    help="loop bench: write a Chrome trace JSON here "
+                         "(repro.obs — see docs/observability.md)")
+    ap.add_argument("--metrics", default=None,
+                    help="loop bench: append metrics JSONL here")
     args = ap.parse_args()
     kw = dict(gens=args.gens)
     if args.pop is not None:
@@ -371,6 +405,8 @@ def main():
         kw["rows"] = args.rows
     if args.chunk_rows is not None:
         kw["chunk_rows"] = args.chunk_rows
+    if args.bench == "loop":
+        kw["trace"], kw["metrics"] = args.trace, args.metrics
     rec = BENCHES[args.bench](**kw)
     out = args.out or f"BENCH_{args.bench}.json"
     with open(out, "w") as f:

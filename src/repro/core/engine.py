@@ -396,6 +396,56 @@ def evolve_step(cfg: GPConfig, state: GPState, X, y, weight=None) -> GPState:
     return _step_body_any(cfg, state, X, y, weight)
 
 
+def _counter_row(cfg: GPConfig, state: GPState, done=None, *, mesh=False,
+                 n_pods: int = 1):
+    """int32[C] telemetry row for ONE scanned generation (columns:
+    repro.obs.counters), computed from the PRE-step state — the same
+    quantities the step body is about to consume, so the cache-hit gate
+    CSEs with the step's own and the row costs a handful of scalar ops.
+    Computed UNCONDITIONALLY: the compiled block program is identical
+    whether anyone reads the counters, which is what pins telemetry
+    on/off to bitwise-identical trajectories with zero recompiles.
+
+    `done` is the block's freeze predicate for this step (None = the
+    block can never freeze); a frozen step reports [0, 0, 1, 0, 0] —
+    its compute ran and was discarded. With `mesh=True` every quantity
+    is replicated across shards (cache columns are 0 there: the elite
+    cache is host/single-device machinery) so the counter stream's
+    out_spec is P(); `n_pods` sizes the classic mesh pod-ring migration
+    count."""
+    I = cfg.island.islands
+    island = I > 1
+    zero = jnp.asarray(0, jnp.int32)
+    E = 0 if mesh else state.cache_op.shape[1 if island else 0]
+    if not E:
+        hit, queries = zero, zero
+    elif island:
+        hit = (jnp.all(state.op[:, :E] == state.cache_op)
+               & jnp.all(state.arg[:, :E] == state.cache_arg)).astype(jnp.int32)
+        queries = jnp.asarray(1, jnp.int32)
+    else:
+        hit = (jnp.all(state.op[:E] == state.cache_op)
+               & jnp.all(state.arg[:E] == state.cache_arg)).astype(jnp.int32)
+        queries = jnp.asarray(1, jnp.int32)
+    # tree evaluations this generation (cache-served rows excluded);
+    # the host multiplies by the dataset row count for trees·rows
+    evals = jnp.asarray(I * cfg.pop_size, jnp.int32) - hit * (I * E)
+    if island and cfg.island.migrate_k:
+        due = ((state.generation % cfg.island.migrate_every)
+               == (cfg.island.migrate_every - 1))
+        migrations = jnp.where(due, I, 0).astype(jnp.int32)
+    elif (not island) and mesh and n_pods > 1:
+        due = ((state.generation % cfg.migrate_every)
+               == (cfg.migrate_every - 1))
+        migrations = jnp.where(due, n_pods, 0).astype(jnp.int32)
+    else:
+        migrations = zero
+    row = jnp.stack([hit, queries, zero, migrations, evals])
+    if done is None:
+        return row
+    return jnp.where(done, jnp.asarray([0, 0, 1, 0, 0], jnp.int32), row)
+
+
 def _block_done(cfg: GPConfig, state: GPState, i, limit):
     """Branch-free freeze predicate for step `i` of a block: True once
     `best_fitness` has reached `cfg.stop_fitness` (on-device early stop;
@@ -427,11 +477,13 @@ def evolve_block(cfg: GPConfig, state: GPState, X, y, weight=None, limit=None, *
                  n_steps: int = 1):
     """Run up to `n_steps` generations in ONE device dispatch via `lax.scan`.
 
-    Returns (state, history) where history is the per-generation
-    `best_fitness` stream — f32[n_steps] for the classic layout,
-    f32[n_steps, I] (one column per island) for island-batched state —
-    so the block's metrics ride back with the state instead of forcing a
-    host sync per generation. Steps freeze into no-ops once
+    Returns (state, history, counters) where history is the
+    per-generation `best_fitness` stream — f32[n_steps] for the classic
+    layout, f32[n_steps, I] (one column per island) for island-batched
+    state — and counters is the int32[n_steps, C] telemetry stream
+    (repro.obs.counters: cache hits/queries, frozen steps, migrations,
+    tree evals), so the block's metrics ride back with the state instead
+    of forcing a host sync per generation. Steps freeze into no-ops once
     `cfg.stop_fitness` is reached or the step index hits `limit`
     (dynamic int32; None = run all `n_steps`), so one compiled program
     covers every block length ≤ n_steps. The freeze is a branch-free
@@ -441,15 +493,18 @@ def evolve_block(cfg: GPConfig, state: GPState, X, y, weight=None, limit=None, *
     caps it at the configured period, or _STOP_CHECK_SPAN when only
     stop_fitness is armed)."""
 
+    can_freeze = cfg.stop_fitness is not None or limit is not None
+
     def body(s, i):
         nxt = _step_body_any(cfg, s, X, y, weight)
         done = _block_done(cfg, s, i, limit)
-        if cfg.stop_fitness is not None or limit is not None:
+        row = _counter_row(cfg, s, done if can_freeze else None)
+        if can_freeze:
             nxt = _freeze(done, s, nxt)
-        return nxt, nxt.best_fitness
+        return nxt, (nxt.best_fitness, row)
 
-    state, history = jax.lax.scan(body, state, jnp.arange(n_steps))
-    return state, history
+    state, (history, counters) = jax.lax.scan(body, state, jnp.arange(n_steps))
+    return state, history, counters
 
 
 def run(cfg: GPConfig, X, y, key=None, generations: int | None = None,
@@ -677,15 +732,44 @@ def tenant_step(spec: TreeSpec, kernels: tuple, tourn_draw: int, elitism: int,
         (state, X, y, weight, params))
 
 
+def _tenant_counter_row(state: TenantState, params: TenantParams):
+    """int32[C] telemetry row for one tenant-batch generation, from the
+    PRE-step state (columns: repro.obs.counters). Cache hits/queries
+    count per ACTIVE slot (the per-slot gates the slot steps are about
+    to take); FROZEN counts inactive slots — finished, early-stopped,
+    or empty — whose compute runs and is discarded this generation;
+    TREE_EVALS sums each active slot's non-cache-served rows. Computed
+    unconditionally, like every counter row, so the service's
+    no-recompile guarantee is untouched."""
+    E = state.cache_op.shape[1]
+    P_ = state.op.shape[1]
+    a32 = tenant_active(state, params).astype(jnp.int32)
+    if E:
+        h32 = (jnp.all(state.op[:, :E] == state.cache_op, axis=(1, 2))
+               & jnp.all(state.arg[:, :E] == state.cache_arg,
+                         axis=(1, 2))).astype(jnp.int32)
+        hits = (h32 * a32).sum()
+        queries = a32.sum()
+    else:
+        h32 = jnp.zeros_like(a32)
+        hits = queries = jnp.asarray(0, jnp.int32)
+    frozen = (1 - a32).sum()
+    evals = (a32 * (P_ - h32 * E)).sum()
+    return jnp.stack([hits, queries, frozen, jnp.asarray(0, jnp.int32),
+                      evals])
+
+
 def build_tenant_block(spec: TreeSpec, kernels: tuple, tourn_draw: int,
                        elitism: int, n_steps: int):
     """The service's ONE compiled program: block(state, X, y, weight,
-    params) -> (state, history f32[n_steps, I]) scanning `tenant_step`
-    `n_steps` generations per dispatch. Everything per-job is a traced
-    operand (TenantParams + the slot data buffers), so the scheduler
-    splices jobs in and out between dispatches without recompiling.
-    Kernel names are canonicalized (aliases collapse) at build time;
-    jit it with donate_argnums=(0,) — the caller owns that."""
+    params) -> (state, history f32[n_steps, I], counters
+    int32[n_steps, C]) scanning `tenant_step` `n_steps` generations per
+    dispatch — the counter stream (repro.obs.counters) rides back with
+    the same dispatch. Everything per-job is a traced operand
+    (TenantParams + the slot data buffers), so the scheduler splices
+    jobs in and out between dispatches without recompiling. Kernel
+    names are canonicalized (aliases collapse) at build time; jit it
+    with donate_argnums=(0,) — the caller owns that."""
     kernels = tuple(fit.get_kernel(k).name for k in kernels)
     for name in kernels:
         if fit.get_kernel(name).partial_fitness is None:
@@ -695,11 +779,14 @@ def build_tenant_block(spec: TreeSpec, kernels: tuple, tourn_draw: int,
 
     def block(state: TenantState, X, y, weight, params: TenantParams):
         def body(s, _):
+            row = _tenant_counter_row(s, params)
             nxt = tenant_step(spec, kernels, tourn_draw, elitism, s, X, y,
                               weight, params)
-            return nxt, nxt.best_fitness
+            return nxt, (nxt.best_fitness, row)
 
-        return jax.lax.scan(body, state, None, length=n_steps)
+        st, (hist, counters) = jax.lax.scan(body, state, None,
+                                            length=n_steps)
+        return st, hist, counters
 
     return block
 
@@ -1021,13 +1108,16 @@ def sharded_evolve_block(cfg: GPConfig, mesh, *, n_steps: int, data_axis="data",
     replicated, the island layout reduces it (min over the pod's local
     islands, `pmin` over the pod axis), so every shard takes the same
     freeze decision either way. Returns (block_fn, specs dict);
-    block_fn(state, X, y, weight, limit) -> (state, history) — `limit`
-    is the replicated dynamic step budget (pass n_steps to run the full
-    block); history is f32[n_steps] replicated for the classic layout,
-    f32[n_steps, I] (one per-island best-fitness stream per column,
-    sharded over pod) for the island layout.
+    block_fn(state, X, y, weight, limit) -> (state, history, counters) —
+    `limit` is the replicated dynamic step budget (pass n_steps to run
+    the full block); history is f32[n_steps] replicated for the classic
+    layout, f32[n_steps, I] (one per-island best-fitness stream per
+    column, sharded over pod) for the island layout; counters is the
+    replicated int32[n_steps, C] telemetry stream (repro.obs.counters —
+    cache columns are 0 on a mesh).
     """
     island = cfg.island.islands > 1
+    n_pods = mesh.shape[pod_axis] if pod_axis else 1
     step, state_specs, data_spec, y_spec, w_spec = _pick_step_builder(cfg)(
         cfg, mesh, data_axis=data_axis, model_axis=model_axis, pod_axis=pod_axis)
 
@@ -1042,19 +1132,22 @@ def sharded_evolve_block(cfg: GPConfig, mesh, *, n_steps: int, data_axis="data",
 
     def block(state: GPState, X, y, weight, limit):
         def body(s, i):
-            nxt = _freeze(done(s, i, limit), s, step(s, X, y, weight))
-            return nxt, nxt.best_fitness
+            d = done(s, i, limit)
+            row = _counter_row(cfg, s, d, mesh=True, n_pods=n_pods)
+            nxt = _freeze(d, s, step(s, X, y, weight))
+            return nxt, (nxt.best_fitness, row)
 
-        return jax.lax.scan(body, state, jnp.arange(n_steps))
+        st, (hist, counters) = jax.lax.scan(body, state, jnp.arange(n_steps))
+        return st, hist, counters
 
     hist_spec = P(None, pod_axis) if island else P()
     smapped = compat.shard_map(
         block, mesh=mesh,
         in_specs=(state_specs, data_spec, y_spec, w_spec, P()),
-        out_specs=(state_specs, hist_spec),
+        out_specs=(state_specs, hist_spec, P()),
     )
     return smapped, dict(state=state_specs, X=data_spec, y=y_spec, weight=w_spec,
-                         limit=P(), history=hist_spec)
+                         limit=P(), history=hist_spec, counters=P())
 
 
 # --- streaming chunked fitness ------------------------------------------------

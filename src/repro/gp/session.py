@@ -42,6 +42,7 @@ host synchronizations, pinned by tests to ≤ ⌈generations/K⌉.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,9 @@ from repro.core.engine import GPConfig, GPState
 from repro.core.trees import to_string, tree_sizes
 from repro.data.loader import feature_major
 from repro.gp import backends as _backends
+from repro.obs import counters as _tc
+from repro.obs.metrics import BlockMonitor, Metrics
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.fault import StepMonitor as _StepMonitor
 
 
@@ -161,7 +165,7 @@ class GPSession:
                  checkpoint_dir: str | None = None, checkpoint_every: int = 10,
                  feature_names=None, callback=None, callback_every: int = 1,
                  block_size: int | None = None, chunk_rows: int | None = None,
-                 **overrides):
+                 tracer=None, metrics=None, **overrides):
         explicit_features = (config is not None or "tree_spec" in overrides
                              or "n_features" in overrides)
         explicit_impl = config is not None or "eval_impl" in overrides
@@ -195,8 +199,21 @@ class GPSession:
         # fitness streams); stays empty for the classic layout
         self.island_history: list[np.ndarray] = []
         self.stats = {"host_syncs": 0, "blocks": 0, "block_s_ema": None,
-                      "stragglers": []}
+                      "stragglers": [], "cache_hits": 0, "cache_queries": 0,
+                      "cache_hit_rate": 0.0, "frozen": 0, "migrations": 0,
+                      "tree_evals": 0}
         self._monitor = _StepMonitor()  # per-block wall time EMA + stragglers
+        # observability (repro.obs): tracer spans + metrics registry are
+        # host-side only — the compiled programs are identical with or
+        # without them (the counter stream is unconditional), so these
+        # defaults cost nothing and enabling them changes no trajectory
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else Metrics()
+        # THE timing path for every block dispatch — jitted, host-loop,
+        # and streamed alike — so block_s_ema/stragglers report everywhere
+        self._block_monitor = BlockMonitor(self._monitor, self.metrics,
+                                           self.stats)
+        self._last_counters = None  # device [K, C] from a raw evolve_block
         self.feature_names = list(feature_names) if feature_names else None
         self._callback = callback
         self._callback_every = max(1, int(callback_every))
@@ -272,7 +289,8 @@ class GPSession:
     def build_sharded_block(self, n_steps: int):
         """(block_fn, specs) of the K-generation mesh evolution block —
         the lowering surface used by launch/dryrun.py; `evolve()` drives
-        it internally. block_fn(state, X, y, weight) -> (state, history)."""
+        it internally. block_fn(state, X, y, weight, limit) ->
+        (state, history, counters)."""
         if self.mesh is None:
             raise ValueError("build_sharded_block needs a topology= mesh")
         return engine.sharded_evolve_block(self._cfg, self.mesh, n_steps=n_steps,
@@ -310,6 +328,15 @@ class GPSession:
         footprint is ONE chunk regardless of total rows. On a mesh each
         chunk is sharded on the data axis (chunk_rows rounds up to a
         multiple of it)."""
+        with self.tracer.span("ingest"):
+            out = self._ingest(X, y, layout=layout,
+                               sample_weight=sample_weight, stream=stream,
+                               chunk_rows=chunk_rows)
+        self.metrics.gauge("rows", self._n_rows)
+        return out
+
+    def _ingest(self, X=None, y=None, *, layout, sample_weight, stream,
+                chunk_rows) -> "GPSession":
         if stream is not None or chunk_rows is not None or (
                 self._chunk_rows is not None):
             return self._ingest_stream(X, y, layout=layout,
@@ -441,17 +468,19 @@ class GPSession:
         if self._X is None and self._stream is None:
             raise ValueError("no dataset — call ingest()/fit() first")
         key = key if key is not None else jax.random.PRNGKey(0)
-        self.state = engine.init_state(self._cfg, key, seeds=seeds,
-                                       feature_names=self.feature_names)
-        self.history = []
-        self.island_history = []
-        self._gen_host = 0
-        self._gen_dirty = False
-        if self._manager is not None:
-            restored, step = self._manager.restore_latest(like=jax.device_get(self.state))
-            if restored is not None:
-                self.state = jax.tree.map(jnp.asarray, restored)
-                self._gen_host = int(step)
+        with self.tracer.span("init"):
+            self.state = engine.init_state(self._cfg, key, seeds=seeds,
+                                           feature_names=self.feature_names)
+            self.history = []
+            self.island_history = []
+            self._gen_host = 0
+            self._gen_dirty = False
+            if self._manager is not None:
+                restored, step = self._manager.restore_latest(
+                    like=jax.device_get(self.state))
+                if restored is not None:
+                    self.state = jax.tree.map(jnp.asarray, restored)
+                    self._gen_host = int(step)
         return self
 
     # --- slot-level state swap (the service scheduler's surface) -------------
@@ -529,9 +558,12 @@ class GPSession:
         block; scan-inside-shard_map on a mesh). Updates the session state
         and returns (state, history) WITHOUT synchronizing with the host —
         history is the device-resident f32[n_steps] best-fitness stream.
-        `evolve()` drives this and owns the block-boundary bookkeeping
-        (history/checkpoints/callbacks)."""
-        state, history = self._dispatch_block(n_steps, n_steps)
+        The block's telemetry counter stream stays device-resident too;
+        `absorb_block_telemetry()` folds it into `stats` on demand (one
+        sync), while `evolve()` — which drives this and owns the
+        block-boundary bookkeeping — absorbs it for free as part of each
+        block's single boundary sync."""
+        state, history, _ = self._dispatch_block(n_steps, n_steps)
         if self._cfg.stop_fitness is None:
             self._gen_host += n_steps  # exact: no freeze possible
         else:
@@ -542,7 +574,9 @@ class GPSession:
         """One block dispatch: a compiled program of `n_steps` scan steps,
         of which only the first `limit` advance (the rest freeze) — so one
         program serves every ragged boundary ≤ n_steps. No host sync, no
-        generation bookkeeping."""
+        generation bookkeeping. Returns (state, history, counters) with
+        counters the device-resident int32[n_steps, C] telemetry stream
+        (repro.obs.counters)."""
         if self.state is None:
             self.init()
         if self._stream is not None:
@@ -561,14 +595,69 @@ class GPSession:
                     block_fn = jax.jit(block, donate_argnums=(0,))
                 self._block_cache[n_steps] = block_fn
             with compat.set_mesh(self.mesh):
-                self.state, history = block_fn(self.state, self._X, self._y,
-                                               self._weight,
-                                               jnp.asarray(limit, jnp.int32))
+                self.state, history, counters = block_fn(
+                    self.state, self._X, self._y, self._weight,
+                    jnp.asarray(limit, jnp.int32))
         else:
-            self.state, history = engine.evolve_block(
+            self.state, history, counters = engine.evolve_block(
                 self._cfg, self.state, self._X, self._y, self._weight,
                 jnp.asarray(limit, jnp.int32), n_steps=n_steps)
-        return self.state, history
+        self._last_counters = counters
+        return self.state, history, counters
+
+    # --- telemetry accounting (repro.obs) ------------------------------------
+
+    def _count_host_sync(self, n: int = 1):
+        """THE host-sync accounting point. Every path that synchronizes
+        with the device counts through here (the counter once drifted
+        across three independent increment sites), and the obs metrics
+        registry sees the same number the `stats` pin tests do."""
+        self.stats["host_syncs"] += n
+        self.metrics.inc("host_syncs", n)
+
+    def _absorb_counters(self, rows):
+        """Fold an int32[K, C] telemetry block (repro.obs.counters) into
+        `stats` and the metrics registry: cache hits/queries (and the
+        derived `cache_hit_rate`), frozen steps, migrations, and tree
+        evaluations (× the real row count for trees·rows)."""
+        tot = _tc.totals(rows)
+        for name, v in tot.items():
+            self.stats[name] = self.stats.get(name, 0) + v
+            if v:
+                self.metrics.inc(name, v)
+        self.stats["cache_hit_rate"] = _tc.hit_rate(self.stats)
+        self.metrics.gauge("cache_hit_rate", self.stats["cache_hit_rate"])
+        if self._n_rows and tot["tree_evals"]:
+            # int64 host math — the device stream stays int32-safe
+            self.metrics.inc("tree_row_evals", tot["tree_evals"] * self._n_rows)
+        self.metrics.emit("counters", **tot)
+
+    def _record_host_eval(self, hit: int, queries: int, evals: int):
+        """Host-path twin of the device counter stream: the scalar/stream
+        generation loops compute their elite-cache gate on the host, so
+        the same telemetry columns land without any device work."""
+        if queries:
+            self.stats["cache_queries"] += queries
+            self.metrics.inc("cache_queries", queries)
+        if hit:
+            self.stats["cache_hits"] += hit
+            self.metrics.inc("cache_hits", hit)
+        self.stats["tree_evals"] += evals
+        self.metrics.inc("tree_evals", evals)
+        self.stats["cache_hit_rate"] = _tc.hit_rate(self.stats)
+
+    def absorb_block_telemetry(self) -> dict:
+        """Fold the latest raw `evolve_block()` dispatch's counter stream
+        into `stats` (ONE host sync) and return `stats`. `evolve()` does
+        this automatically inside each block's boundary sync; this hook
+        is for raw-block drivers (benchmarks) that want the cache hit
+        rate afterwards."""
+        if self._last_counters is not None:
+            rows = jax.device_get(self._last_counters)
+            self._last_counters = None
+            self._count_host_sync()
+            self._absorb_counters(rows)
+        return self.stats
 
     def _eval_rows(self, op, arg):
         """Host-side fitness of genome rows [R, N] -> np.f32[R] against the
@@ -596,14 +685,22 @@ class GPSession:
             acc = jnp.zeros((op.shape[0], kern.n_moments), jnp.float32)
             with compat.set_mesh(self.mesh):
                 for X, y, w in self._stream:
-                    acc = self._stream_fold(acc, op, arg,
-                                            jax.device_put(X, sh_X),
-                                            jax.device_put(y, sh_y),
-                                            jax.device_put(w, sh_y))
+                    # per-chunk host-side cost (place + dispatch; the fold
+                    # itself is async) — no sync is added for timing
+                    t0 = time.perf_counter()
+                    with self.tracer.span("chunk"):
+                        acc = self._stream_fold(acc, op, arg,
+                                                jax.device_put(X, sh_X),
+                                                jax.device_put(y, sh_y),
+                                                jax.device_put(w, sh_y))
+                    self.metrics.observe("chunk_s", time.perf_counter() - t0)
             fitness = kern.reduce_moments(acc, cfg.fitness)
         else:
-            fitness = engine.chunked_fitness(cfg, op, arg, self._stream,
-                                             impl=self._backend.name)
+            t0 = time.perf_counter()
+            with self.tracer.span("stream_fold"):
+                fitness = engine.chunked_fitness(cfg, op, arg, self._stream,
+                                                 impl=self._backend.name)
+            self.metrics.observe("stream_fold_s", time.perf_counter() - t0)
         if self._stream.n_rows is not None:
             self._n_rows = self._stream.n_rows
         return np.asarray(fitness, np.float32)
@@ -630,6 +727,8 @@ class GPSession:
         op_h, arg_h = np.asarray(state.op), np.asarray(state.arg)
         hit = E and (np.array_equal(op_h[:E], np.asarray(state.cache_op))
                      and np.array_equal(arg_h[:E], np.asarray(state.cache_arg)))
+        self._record_host_eval(int(bool(hit)), 1 if E else 0,
+                               op_h.shape[0] - (E if hit else 0))
         if hit:
             fitness = np.concatenate([np.asarray(state.cache_fit),
                                       eval_rows(op_h[E:], arg_h[E:])])
@@ -679,6 +778,8 @@ class GPSession:
         op3, arg3 = op2.reshape(I, P, N), arg2.reshape(I, P, N)
         hit = E and (np.array_equal(op3[:, :E], np.asarray(state.cache_op))
                      and np.array_equal(arg3[:, :E], np.asarray(state.cache_arg)))
+        self._record_host_eval(int(bool(hit)), 1 if E else 0,
+                               I * P - (I * E if hit else 0))
         if hit:
             tail = eval_rows(op3[:, E:].reshape(-1, N),
                              arg3[:, E:].reshape(-1, N)).reshape(I, P - E)
@@ -764,7 +865,7 @@ class GPSession:
         steps may not have advanced it. One host sync."""
         if self._gen_dirty:
             self._gen_host = int(self.state.generation)
-            self.stats["host_syncs"] += 1
+            self._count_host_sync()
             self._gen_dirty = False
 
     def _evolve_host(self, total: int) -> GPState:
@@ -772,15 +873,20 @@ class GPSession:
         generation already synchronizes — blocks would buy nothing)."""
         cfg = self._cfg
         for i in range(total):
-            self.step()
+            # the block monitor wraps EVERY loop path (a host generation
+            # is a one-step block), so block_s_ema/stragglers report here
+            # too, not just on the jitted block loop
+            with self._block_monitor:
+                self.step()
             bf = np.asarray(self.state.best_fitness)
             if bf.ndim:  # island run: keep the per-island streams too
                 self.island_history.append(bf.copy())
             best = float(bf.min()) if bf.ndim else float(bf)
             self.history.append(best)
-            self.stats["host_syncs"] += 1
+            self._count_host_sync()
             if self._manager is not None:
-                self._manager.maybe_save(self.state, self._gen_host)
+                with self.tracer.span("checkpoint"):
+                    self._manager.maybe_save(self.state, self._gen_host)
             stopped = cfg.stop_fitness is not None and best <= cfg.stop_fitness
             if self._callback is not None and (
                     self._gen_host % self._callback_every == 0
@@ -816,28 +922,35 @@ class GPSession:
                 # and silently truncate the run
                 K = min(self._block_span(target - self._gen_host), quantum)
                 prev_gen = self._gen_host
+                block_idx = self.stats["blocks"]
                 # the monitor times dispatch THROUGH the block-boundary
                 # sync — the span a straggling host/device would stretch
-                with self._monitor:
-                    _, history = self._dispatch_block(quantum, K)
-                    # ONE sync per block: final generation counter + the
-                    # best-fitness stream come back together
-                    gen_now, hist = jax.device_get((self.state.generation,
-                                                    history))
+                with self._block_monitor, self.tracer.span(
+                        "block", args={"k": K, "quantum": quantum}), \
+                        self.tracer.maybe_profile(block_idx):
+                    _, history, counters = self._dispatch_block(quantum, K)
+                    # ONE sync per block: final generation counter, the
+                    # best-fitness stream and the telemetry counter
+                    # stream come back together
+                    gen_now, hist, crows = jax.device_get(
+                        (self.state.generation, history, counters))
                 gen_now = int(gen_now)
-                self.stats["host_syncs"] += 1
-                self.stats["blocks"] += 1
-                self.stats["block_s_ema"] = self._monitor.ema
-                self.stats["stragglers"] = self._monitor.stragglers
+                self._count_host_sync()
+                self._last_counters = None  # absorbed here, same sync
+                self._absorb_counters(crows)
                 ran = gen_now - prev_gen
                 self._gen_host = gen_now
+                self.metrics.gauge("generation", gen_now)
+                if ran and self._monitor.last:
+                    self.metrics.gauge("gens_per_s", ran / self._monitor.last)
                 rows = hist[:ran]
                 if hist.ndim == 2:  # island run: [K, I] per-island streams
                     self.island_history.extend(np.asarray(rows))
                     rows = rows.min(axis=1)
                 self.history.extend(float(b) for b in rows)
                 if self._manager is not None:
-                    self._manager.maybe_save(self.state, gen_now)
+                    with self.tracer.span("checkpoint"):
+                        self._manager.maybe_save(self.state, gen_now)
                 stopped = ran < K or (cfg.stop_fitness is not None and ran
                                       and rows[ran - 1] <= cfg.stop_fitness)
                 last = stopped or gen_now >= target
@@ -848,11 +961,13 @@ class GPSession:
                     break
         if self._manager is not None:
             # final save, unless the last block boundary already saved here
-            self._manager.wait()
-            if (not self._manager.saved_steps
-                    or self._manager.saved_steps[-1] != self._gen_host):
-                self._manager.maybe_save(self.state, self._gen_host, force=True)
-            self._manager.wait()
+            with self.tracer.span("checkpoint"):
+                self._manager.wait()
+                if (not self._manager.saved_steps
+                        or self._manager.saved_steps[-1] != self._gen_host):
+                    self._manager.maybe_save(self.state, self._gen_host,
+                                             force=True)
+                self._manager.wait()
         return self.state
 
     def fit(self, X, y, *, layout: str = "rows", generations: int | None = None,

@@ -48,7 +48,9 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
                 ckpt_dir: str | None = None, ckpt_every: int = 10,
                 seeds=None, archive_every: int = 1, islands: int = 1,
                 migrate_every: int = 10, migrate_k: int = 4,
-                island_topology: str = "ring", chunk_rows: int | None = None):
+                island_topology: str = "ring", chunk_rows: int | None = None,
+                trace: str | None = None, metrics: str | None = None,
+                profile_dir: str | None = None, profile_block: int | None = None):
     """One archived GP run on a named dataset through the GPSession door.
 
     `archive_every` is the callback (= evolution-block) period: the run
@@ -56,12 +58,23 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
     archive gets one record per block boundary (the per-generation
     best-fitness curve still lands in full via `sess.history`).
     `islands > 1` runs the island-model layout — `pop` trees PER island —
-    on whatever topology the run uses (docs/islands.md)."""
+    on whatever topology the run uses (docs/islands.md). `trace` /
+    `metrics` are output paths arming the repro.obs Tracer (Chrome trace
+    JSON — open in Perfetto) and Metrics JSONL sink
+    (docs/observability.md); `profile_dir`/`profile_block` arm a
+    jax.profiler window around one evolution block."""
+    from repro.obs import Metrics, Tracer
+
+    tracer = (Tracer(trace, profile_dir=profile_dir,
+                     profile_block=profile_block)
+              if (trace or profile_dir) else None)
+    mreg = Metrics(metrics) if metrics else None
     kw = dict(pop_size=pop, max_depth=depth, n_consts=8, generations=generations,
               backend=backend, topology=topology,
               checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every,
               islands=islands, migrate_every=migrate_every, migrate_k=migrate_k,
-              island_topology=island_topology, chunk_rows=chunk_rows)
+              island_topology=island_topology, chunk_rows=chunk_rows,
+              tracer=tracer, metrics=mreg)
     if fn_set != "auto":
         kw["fn_set"] = fn_set
     history = []
@@ -93,6 +106,16 @@ def run_dataset(name: str, *, generations: int = 30, pop: int = 100,
     tree = sess.best_expression()
     log(f"[{name}] {generations} generations in {wall:.2f}s — best: {tree} "
         f"({sess.stats['blocks']} blocks, {sess.stats['host_syncs']} host syncs)")
+    if sess.stats["cache_queries"]:
+        log(f"  elite cache: {sess.stats['cache_hits']}/"
+            f"{sess.stats['cache_queries']} hits "
+            f"({sess.stats['cache_hit_rate']:.2f})")
+    if tracer is not None and trace:
+        log(f"  trace written to {tracer.save()}")
+    if mreg is not None:
+        mreg.close()
+        log(f"  metrics written to {metrics} "
+            f"(summarize: python -m repro.obs.report {metrics})")
     return sess.state, wall, history
 
 
@@ -129,6 +152,18 @@ def main():
                     help="streaming chunked fitness: evaluate the dataset as "
                          "a fold over fixed-size chunks (bounded device "
                          "memory; None = monolithic)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome trace JSON (open in Perfetto / "
+                         "chrome://tracing) of the run's spans here")
+    ap.add_argument("--metrics", default=None,
+                    help="append metrics JSONL here (summarize with "
+                         "python -m repro.obs.report)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="arm a jax.profiler window (device-level XLA "
+                         "timing) writing to this directory")
+    ap.add_argument("--profile-block", type=int, default=None,
+                    help="which evolution block the profiler window wraps "
+                         "(default 0)")
     args = ap.parse_args()
     run_dataset(args.dataset, generations=args.generations, pop=args.pop,
                 depth=args.depth, backend=args.backend,
@@ -137,7 +172,9 @@ def main():
                 archive_every=args.archive_every, islands=args.islands,
                 migrate_every=args.migrate_every, migrate_k=args.migrate_k,
                 island_topology=args.island_topology,
-                chunk_rows=args.chunk_rows)
+                chunk_rows=args.chunk_rows, trace=args.trace,
+                metrics=args.metrics, profile_dir=args.profile_dir,
+                profile_block=args.profile_block)
 
 
 if __name__ == "__main__":

@@ -76,15 +76,23 @@ def load_job_file(path: str, *, data_cap: int) -> list[JobSpec]:
 def serve(jobs: list[JobSpec], *, slots: int = 4, pop: int = 64,
           depth: int = 5, data_cap: int = 128, block_size: int = 8,
           strategy: str = "fifo", ckpt_dir: str | None = None,
-          ckpt_every: int = 1, log=print):
+          ckpt_every: int = 1, log=print, trace: str | None = None,
+          metrics: str | None = None):
     """Submit every job, drain the queue, report. Returns (service,
-    handles in submit order)."""
+    handles in submit order). `trace`/`metrics` are output paths arming
+    the repro.obs Tracer (Chrome trace JSON with per-job lifetime lanes)
+    and Metrics JSONL sink — see docs/observability.md."""
+    from repro.obs import Metrics, Tracer
+
+    tracer = Tracer(trace) if trace else None
+    mreg = Metrics(metrics) if metrics else None
     n_features = max(j.n_features for j in jobs)
     data_cap = max(data_cap, max(j.n_rows for j in jobs))
     svc = GPService(slots=slots, pop_size=pop, max_depth=depth,
                     n_features=n_features, data_cap=data_cap,
                     block_size=block_size, strategy=strategy,
-                    checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every)
+                    checkpoint_dir=ckpt_dir, checkpoint_every=ckpt_every,
+                    tracer=tracer, metrics=mreg)
     handles = [svc.submit(j) for j in jobs]
     t0 = time.time()
     svc.run()
@@ -98,6 +106,15 @@ def serve(jobs: list[JobSpec], *, slots: int = 4, pop: int = 64,
         f"{wall:.2f}s — {s['admissions']} admissions, {s['evictions']} "
         f"evictions, {s['restarts']} restarts, {s['compiles']} compiled "
         f"program(s)")
+    if s["cache_queries"]:
+        log(f"  elite cache: {s['cache_hits']}/{s['cache_queries']} hits "
+            f"({s['cache_hit_rate']:.2f})")
+    if tracer is not None:
+        log(f"  trace written to {tracer.save()}")
+    if mreg is not None:
+        mreg.close()
+        log(f"  metrics written to {metrics} "
+            f"(summarize: python -m repro.obs.report {metrics})")
     return svc, handles
 
 
@@ -120,6 +137,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=1,
                     help="blocks between committed service checkpoints")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome trace JSON (admit/dispatch spans + "
+                         "per-job lifetime lanes; open in Perfetto) here")
+    ap.add_argument("--metrics", default=None,
+                    help="append metrics JSONL here (summarize with "
+                         "python -m repro.obs.report)")
     args = ap.parse_args()
     jobs = (load_job_file(args.job_file, data_cap=args.data_cap)
             if args.job_file
@@ -127,7 +150,8 @@ def main():
     serve(jobs, slots=args.slots, pop=args.pop, depth=args.depth,
           data_cap=args.data_cap, block_size=args.block_size,
           strategy=args.strategy, ckpt_dir=args.ckpt_dir,
-          ckpt_every=args.ckpt_every)
+          ckpt_every=args.ckpt_every, trace=args.trace,
+          metrics=args.metrics)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""repro.obs — observability for the GP stack.
+
+Three pieces (see docs/observability.md):
+
+- `counters`: the on-device `[K, C]` telemetry counter stream contract
+  that every evolution-block scan emits alongside best-fitness —
+  telemetry rides the existing one-sync-per-block dispatch and is
+  computed unconditionally, so enabling it never recompiles and never
+  changes a trajectory.
+- `trace.Tracer`: Chrome-trace-event JSON spans (Perfetto-viewable)
+  for ingest, block dispatch, chunk folds, checkpoints, and service
+  admission/eviction/job lifetimes; `NULL_TRACER` is the no-op default.
+- `metrics.Metrics`: counters/gauges/EMA summaries with a JSONL sink;
+  `metrics.BlockMonitor` routes ALL block timing through one
+  `runtime.fault.StepMonitor` wrapper. `python -m repro.obs.report`
+  renders a run's JSONL (and optionally its trace) as a table.
+"""
+from repro.obs import counters  # noqa: F401
+from repro.obs.metrics import BlockMonitor, Metrics  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    NULL_TRACER,
+    NullTracer,
+    Tracer,
+    validate_trace,
+)

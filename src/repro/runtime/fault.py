@@ -28,6 +28,7 @@ class StepMonitor:
         self.threshold = threshold
         self.alpha = alpha
         self.ema: float | None = None
+        self.last: float | None = None
         self.stragglers: list[tuple[int, float]] = []
         self.step = 0
 
@@ -37,6 +38,7 @@ class StepMonitor:
 
     def __exit__(self, *exc):
         dt = time.monotonic() - self._t0
+        self.last = dt
         if self.ema is not None and dt > self.threshold * self.ema:
             self.stragglers.append((self.step, dt))
         self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt

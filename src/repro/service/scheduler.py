@@ -36,6 +36,9 @@ from repro.core import fitness as fit
 from repro.core.engine import TenantState
 from repro.core.islands import splice_island, take_island
 from repro.core.trees import TreeSpec, to_string
+from repro.obs import counters as _tc
+from repro.obs.metrics import BlockMonitor, Metrics
+from repro.obs.trace import NULL_TRACER
 from repro.runtime.fault import HeartbeatMonitor, StepMonitor, run_with_restarts
 from repro.service.job import CANCELLED, DONE, PENDING, RUNNING, JobHandle, JobSpec
 from repro.service.packer import JobBatch, pack_order
@@ -68,7 +71,8 @@ class GPService:
                  elitism: int = 1, block_size: int = 8,
                  strategy: str = "fifo", checkpoint_dir: str | None = None,
                  checkpoint_every: int = 1, checkpoint_keep: int = 4,
-                 heartbeat_deadline_s: float = 10.0, fault_hook=None):
+                 heartbeat_deadline_s: float = 10.0, fault_hook=None,
+                 tracer=None, metrics=None):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.tree_spec = (tree_spec if tree_spec is not None
@@ -97,7 +101,16 @@ class GPService:
         self.monitor = StepMonitor()
         self.stats = {"blocks": 0, "admissions": 0, "evictions": 0,
                       "restarts": 0, "compiles": 0, "block_s_ema": None,
-                      "stragglers": []}
+                      "stragglers": [], "cache_hits": 0, "cache_queries": 0,
+                      "cache_hit_rate": 0.0, "frozen": 0, "tree_evals": 0}
+        # observability (repro.obs): host-side only — the compiled tenant
+        # block is identical with or without a tracer/metrics sink (the
+        # counter stream is unconditional), so the no-recompile guarantee
+        # and the block trajectories are untouched by enabling these
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else Metrics()
+        self._block_monitor = BlockMonitor(self.monitor, self.metrics,
+                                           self.stats)
         self._manager = None
         if checkpoint_dir:
             from repro.ckpt.checkpoint import CheckpointManager
@@ -219,50 +232,81 @@ class GPService:
         free = self.batch.free_slots
         if not free or not self._pending:
             return
-        chosen = pack_order(self._pending, len(free), self.strategy)
-        for slot, handle in zip(free, chosen):
-            self._pending.remove(handle)
-            if handle._saved is not None:  # preempted/repacked: resume
-                sub = jax.tree.map(jnp.asarray, handle._saved)
-                handle._saved = None
-            else:
-                sub = engine.init_tenant_slot(
-                    jax.random.PRNGKey(handle.spec.seed), self.pop_size,
-                    self.tree_spec, elitism=self.elitism)
-            self._state = splice_island(self._state, slot, sub)
-            self._gens[slot] = int(sub.gens_done)
-            self.batch.admit(slot, handle)
-            handle.status = RUNNING
-            self.heartbeats.beat(self._worker_id(handle))
-            self.stats["admissions"] += 1
+        with self.tracer.span("admit", args={"free": len(free),
+                                             "pending": len(self._pending)}):
+            chosen = pack_order(self._pending, len(free), self.strategy)
+            for slot, handle in zip(free, chosen):
+                self._pending.remove(handle)
+                if handle._saved is not None:  # preempted/repacked: resume
+                    sub = jax.tree.map(jnp.asarray, handle._saved)
+                    handle._saved = None
+                else:
+                    sub = engine.init_tenant_slot(
+                        jax.random.PRNGKey(handle.spec.seed), self.pop_size,
+                        self.tree_spec, elitism=self.elitism)
+                self._state = splice_island(self._state, slot, sub)
+                self._gens[slot] = int(sub.gens_done)
+                self.batch.admit(slot, handle)
+                handle.status = RUNNING
+                self.heartbeats.beat(self._worker_id(handle))
+                self.stats["admissions"] += 1
+                self.metrics.inc("admissions")
+                # async track: one lifetime lane per job, admission → publish
+                self.tracer.begin_async("job", handle.job_id, cat="service",
+                                        args={"slot": slot})
+        self.metrics.gauge("occupied_slots", len(self.batch.occupied))
 
     def _dispatch_and_publish(self):
         X, y, w, params = self.batch.operands()
-        with self.monitor:
-            self._state, hist = self._block(self._state, X, y, w, params)
+        with self._block_monitor, self.tracer.span(
+                "dispatch", args={"occupied": len(self.batch.occupied)}):
+            self._state, hist, counters = self._block(self._state, X, y, w,
+                                                      params)
             # ONE host sync per block: counters, champions and the
             # per-generation streams come back together
-            host, hist = jax.device_get((self._state, hist))
+            host, hist, crows = jax.device_get((self._state, hist, counters))
         hist = np.asarray(hist)  # [K, I]
-        self.stats["blocks"] += 1
-        self.stats["block_s_ema"] = self.monitor.ema
-        self.stats["stragglers"] = self.monitor.stragglers
+        self._absorb_counters(crows)
         self.stats["compiles"] = self._compile_count()
+        self.metrics.gauge("compiles", self.stats["compiles"])
 
         budgets = np.asarray(params.budget)
         stops = np.asarray(params.stop)
+        total_ran = 0
         for slot, handle in self.batch.occupied:
             ran = int(host.gens_done[slot]) - int(self._gens[slot])
+            total_ran += ran
             self._gens[slot] = int(host.gens_done[slot])
             handle.gens_done = int(host.gens_done[slot])
             handle.best_fitness = float(host.best_fitness[slot])
             handle.history.extend(float(b) for b in hist[:ran, slot])
             self.heartbeats.beat(self._worker_id(handle))
+            if ran and self.monitor.last:
+                # per-tenant progress rate over this block's wall time
+                self.metrics.observe("tenant_gens_per_s",
+                                     ran / self.monitor.last)
             finished = (handle.gens_done >= int(budgets[slot])
                         or handle.best_fitness <= float(stops[slot]))
             if finished or handle._cancel:
                 self._publish(slot, handle, host,
                               DONE if finished else CANCELLED)
+        if total_ran and self.monitor.last:
+            self.metrics.gauge("gens_per_s", total_ran / self.monitor.last)
+        self.metrics.gauge("occupied_slots", len(self.batch.occupied))
+
+    def _absorb_counters(self, rows):
+        """Fold a tenant block's int32[K, C] telemetry stream
+        (repro.obs.counters) into `stats` + the metrics registry; the
+        elite-cache hit rate is derived from the accumulated totals."""
+        tot = _tc.totals(rows)
+        tot.pop("migrations", None)  # tenant slots never migrate
+        for name, v in tot.items():
+            self.stats[name] = self.stats.get(name, 0) + v
+            if v:
+                self.metrics.inc(name, v)
+        self.stats["cache_hit_rate"] = _tc.hit_rate(self.stats)
+        self.metrics.gauge("cache_hit_rate", self.stats["cache_hit_rate"])
+        self.metrics.emit("counters", **tot)
 
     def _publish(self, slot: int, handle: JobHandle, host: TenantState,
                  status: str):
@@ -281,6 +325,12 @@ class GPService:
         # would report every finished job forever
         self.heartbeats.remove(self._worker_id(handle))
         self.stats["evictions"] += 1
+        self.metrics.inc("evictions")
+        self.tracer.end_async("job", handle.job_id, cat="service",
+                              args={"status": status,
+                                    "gens": handle.gens_done})
+        self.tracer.instant("publish", cat="service",
+                            args={"job": handle.job_id, "status": status})
 
     def _worker_id(self, handle: JobHandle) -> str:
         return f"job-{handle.job_id}"
@@ -331,6 +381,10 @@ class GPService:
             handle._slot = i
             handle._saved = None
             handle.status = RUNNING
+            # a rollback puts the job back in flight: reopen its lifetime
+            # lane (idempotent — a still-open lane is untouched)
+            self.tracer.begin_async("job", handle.job_id, cat="service",
+                                    args={"slot": i, "rollback": True})
             handle.gens_done = int(gens[i])
             handle.best_fitness = float(best[i])
             handle.history = handle.history[:int(gens[i])]

@@ -41,14 +41,15 @@ def test_block_bitwise_identical_to_stepwise():
     s_step = init_state(cfg, jax.random.PRNGKey(0))
     for _ in range(K):
         s_step = evolve_step(cfg, s_step, X, y)
-    s_blk, hist = evolve_block(cfg, init_state(cfg, jax.random.PRNGKey(0)),
-                               X, y, None, n_steps=K)
+    s_blk, hist, counters = evolve_block(
+        cfg, init_state(cfg, jax.random.PRNGKey(0)), X, y, None, n_steps=K)
     for name, a, b in zip(s_step._fields, jax.tree.leaves(s_step),
                           jax.tree.leaves(s_blk)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg=f"GPState.{name} diverged")
     assert hist.shape == (K,)
     assert float(hist[-1]) == float(s_step.best_fitness)
+    assert counters.shape == (K, 5)  # telemetry stream rides the same scan
 
 
 def test_block_early_stop_freezes_on_device():
@@ -60,10 +61,12 @@ def test_block_early_stop_freezes_on_device():
 
     cfg, X, y = _kepler_setup()
     cfg = dataclasses.replace(cfg, stop_fitness=1e9)  # stops after gen 1
-    state, hist = evolve_block(cfg, init_state(cfg, jax.random.PRNGKey(0)),
-                               X, y, None, n_steps=10)
+    state, hist, counters = evolve_block(
+        cfg, init_state(cfg, jax.random.PRNGKey(0)), X, y, None, n_steps=10)
     assert int(state.generation) == 1
     assert np.all(np.asarray(hist) == np.asarray(hist)[0])
+    # frozen steps self-report in the counter stream (column 2)
+    assert int(np.asarray(counters)[:, 2].sum()) == 9
 
 
 def test_session_one_sync_per_block():
@@ -261,8 +264,9 @@ _SUBPROCESS_MESH_BLOCKS = textwrap.dedent("""
         js = jax.jit(step)
         for _ in range(6):
             s_step = js(s_step, X, y, w)
-        s_blk, hist = jax.jit(block)(init_state(cfg, jax.random.PRNGKey(0)), X, y, w,
-                                     jnp.asarray(6, jnp.int32))
+        s_blk, hist, counters = jax.jit(block)(
+            init_state(cfg, jax.random.PRNGKey(0)), X, y, w,
+            jnp.asarray(6, jnp.int32))
     for name, a, b in zip(s_step._fields, jax.tree.leaves(s_step), jax.tree.leaves(s_blk)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg="GPState." + name)

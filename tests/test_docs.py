@@ -70,8 +70,10 @@ def test_relative_links_and_anchors_resolve(doc):
 def test_docs_exist_and_are_linked_from_readme():
     """The docs/ subsystem ships with the repo and is reachable from the
     front page (ISSUE 3 acceptance criterion)."""
-    for name in ("architecture.md", "fitness-kernels.md"):
+    for name in ("architecture.md", "fitness-kernels.md",
+                 "observability.md"):
         assert (ROOT / "docs" / name).exists(), f"docs/{name} missing"
     readme_links = _links(ROOT / "README.md")
     assert any("docs/architecture.md" in l for l in readme_links)
     assert any("docs/fitness-kernels.md" in l for l in readme_links)
+    assert any("docs/observability.md" in l for l in readme_links)

@@ -149,7 +149,7 @@ def test_island_block_bitwise_identical_to_stepwise():
     s_step = engine.init_state(cfg, jax.random.PRNGKey(0))
     for _ in range(K):
         s_step = engine.evolve_step(cfg, s_step, X, yj)
-    s_blk, hist = engine.evolve_block(
+    s_blk, hist, _ = engine.evolve_block(
         cfg, engine.init_state(cfg, jax.random.PRNGKey(0)), X, yj, None,
         n_steps=K)
     for name, a, b in zip(s_step._fields, jax.tree.leaves(s_step),
@@ -193,7 +193,7 @@ def test_frozen_generations_do_not_migrate():
     X, yj = jnp.asarray(feature_major(X_rows)), jnp.asarray(y)
     one = engine.evolve_step(cfg, engine.init_state(cfg, jax.random.PRNGKey(0)),
                              X, yj)
-    blk, hist = engine.evolve_block(
+    blk, hist, _ = engine.evolve_block(
         cfg, engine.init_state(cfg, jax.random.PRNGKey(0)), X, yj, None,
         n_steps=8)
     assert int(blk.generation) == 1

@@ -1,0 +1,332 @@
+"""Observability (repro.obs): the telemetry acceptance gates.
+
+The load-bearing property is FREEDOM FROM OBSERVER EFFECTS — counters
+are computed unconditionally inside the compiled evolution blocks, so
+turning tracing/metrics on must not recompile anything, add host syncs,
+or perturb a single bit of the trajectory. These tests pin that, plus
+the trace-file schema (valid Chrome trace JSON, properly nested spans,
+paired async job lanes), the elite-cache hit-rate surface on both the
+session and the service, and the `repro.obs.report` summarizer.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.data.datasets import kepler
+from repro.gp import GPSession
+from repro.obs import Metrics, NULL_TRACER, Tracer, counters, validate_trace
+from repro.obs.metrics import BlockMonitor
+from repro.service import GPService, JobSpec
+
+
+def _jobs(n=3, rows=48, seed=0):
+    r = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        X = r.randn(rows, 3).astype(np.float32)
+        y = (X[:, 0] * X[:, 1]).astype(np.float32)
+        out.append(JobSpec(X, y, kernel="r", generations=8, seed=i,
+                           name=f"obs-{i}"))
+    return out
+
+
+# --- tentpole: no observer effects -------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("islands", [1, 3])
+@pytest.mark.parametrize("genome", ["tree", "postfix"])
+def test_telemetry_on_off_bitwise_parity(backend, islands, genome, tmp_path):
+    """Tracing + metrics ON yields the bitwise-identical best-fitness
+    trajectory, the same generation count and the same host-sync budget
+    as OFF — across backend × island layout × genome. The counter stream
+    is unconditional in the compiled program, so enablement is purely a
+    host-side concern."""
+    X_rows, y, _ = kepler()
+    kw = dict(pop_size=16, generations=10, kernel="r", backend=backend,
+              genome=genome, islands=islands, migrate_every=3, migrate_k=2,
+              block_size=5)
+    off = GPSession(**kw)
+    off.fit(X_rows, y, key=jax.random.PRNGKey(0))
+
+    tracer = Tracer(str(tmp_path / "trace.json"))
+    mreg = Metrics(str(tmp_path / "metrics.jsonl"))
+    on = GPSession(tracer=tracer, metrics=mreg, **kw)
+    on.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    mreg.close()
+
+    np.testing.assert_array_equal(np.asarray(off.history),
+                                  np.asarray(on.history))
+    assert on.generation == off.generation
+    assert on.stats["host_syncs"] == off.stats["host_syncs"]
+    assert on.stats["blocks"] == off.stats["blocks"]
+    # telemetry actually flowed on the instrumented run
+    assert on.stats["tree_evals"] > 0
+    with open(tracer.save()) as f:
+        assert validate_trace(json.load(f)) == []
+
+
+def test_telemetry_does_not_recompile_blocks():
+    """Two identically-configured sessions — one silent, one fully
+    instrumented — share ONE compiled evolution block: the memoized
+    engine cache must not grow when the second (traced) run dispatches."""
+    X_rows, y, _ = kepler()
+    kw = dict(pop_size=16, generations=8, kernel="r", backend="jnp")
+    s0 = GPSession(**kw)
+    s0.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    n0 = engine.evolve_block._cache_size()
+    s1 = GPSession(tracer=Tracer(), metrics=Metrics(), **kw)
+    s1.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert engine.evolve_block._cache_size() == n0
+    np.testing.assert_array_equal(np.asarray(s0.history),
+                                  np.asarray(s1.history))
+
+
+def test_counter_stream_accounts_evaluations():
+    """The device counter stream's totals land in session stats: a G-
+    generation run on pop P evaluates at most G*P trees (less cache
+    skips), every step queried the elite cache, and the hit rate is
+    consistent with the raw counters."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=16, generations=12, kernel="r", backend="jnp")
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    st = s.stats
+    assert st["cache_queries"] == 12
+    assert 0 < st["tree_evals"] <= 12 * 16
+    assert st["tree_evals"] == 12 * 16 - st["cache_hits"] * 1  # elitism=1
+    assert st["cache_hit_rate"] == pytest.approx(
+        st["cache_hits"] / st["cache_queries"])
+
+
+def test_frozen_steps_counted_not_evaluated():
+    """With stop_fitness tripping at generation 1, the rest of the capped
+    block self-reports as frozen compute in the counter stream."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=16, generations=40, kernel="r", backend="jnp",
+                  stop_fitness=1e9)
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert s.generation == 1
+    assert s.stats["frozen"] > 0
+    assert s.stats["cache_queries"] == 1  # only the live step queried
+
+
+# --- satellite: elite-cache hit rate on both doors ---------------------------
+
+
+def test_session_cache_hit_rate_surfaces():
+    """A run long enough to converge its elites reports hits > 0; with
+    elite_cache=False the counters stay zeroed and the rate is 0."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=16, generations=30, kernel="r", backend="jnp")
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert s.stats["cache_hits"] > 0
+    assert 0.0 < s.stats["cache_hit_rate"] <= 1.0
+
+    s2 = GPSession(pop_size=16, generations=30, kernel="r", backend="jnp",
+                   elite_cache=False)
+    s2.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    assert s2.stats["cache_hits"] == 0 and s2.stats["cache_queries"] == 0
+    assert s2.stats["cache_hit_rate"] == 0.0
+
+
+def test_host_backend_cache_hit_rate_surfaces():
+    """The scalar host loop feeds the same stats surface (satellite: the
+    host path is not a telemetry dead zone)."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=12, generations=12, kernel="r", backend="scalar")
+    s.fit(X_rows, y)
+    assert s.stats["cache_queries"] == 12
+    assert s.stats["tree_evals"] > 0
+    assert s.stats["blocks"] > 0 and s.stats["block_s_ema"] is not None
+
+
+def test_service_cache_hit_rate_and_no_recompile(tmp_path):
+    """The service aggregates slot-level cache counters; enabling
+    tracer + metrics keeps the one-compiled-program guarantee."""
+    tracer = Tracer(str(tmp_path / "svc.json"))
+    mreg = Metrics(str(tmp_path / "svc.jsonl"))
+    svc = GPService(slots=2, pop_size=32, n_features=3, data_cap=64,
+                    block_size=4, tracer=tracer, metrics=mreg)
+    for j in _jobs(3):
+        svc.submit(j)
+    svc.run()
+    mreg.close()
+    assert svc.stats["compiles"] == 1, svc.stats
+    assert svc.stats["cache_queries"] > 0
+    assert svc.stats["tree_evals"] > 0
+    assert 0.0 <= svc.stats["cache_hit_rate"] <= 1.0
+    # per-job async lanes all paired, spans all nested
+    payload = json.load(open(tracer.save()))
+    assert validate_trace(payload) == []
+    phases = {e["ph"] for e in payload["traceEvents"]}
+    assert {"b", "e", "B", "E"} <= phases
+    names = {e["name"] for e in payload["traceEvents"]}
+    assert {"admit", "dispatch", "job"} <= names
+
+
+def test_service_elitism_zero_disables_cache_counters():
+    svc = GPService(slots=2, pop_size=32, n_features=3, data_cap=64,
+                    block_size=4, elitism=0)
+    for j in _jobs(2):
+        svc.submit(j)
+    svc.run()
+    assert svc.stats["cache_hits"] == 0 and svc.stats["cache_queries"] == 0
+    assert svc.stats["cache_hit_rate"] == 0.0
+
+
+# --- satellite: trace schema --------------------------------------------------
+
+
+def test_trace_schema_and_nesting(tmp_path):
+    """A real session run writes valid Chrome trace JSON: envelope,
+    nested B/E spans (ingest, block, checkpoint), no orphan E events."""
+    X_rows, y, _ = kepler()
+    path = str(tmp_path / "t.json")
+    tracer = Tracer(path)
+    s = GPSession(pop_size=16, generations=9, kernel="r", backend="jnp",
+                  block_size=3, tracer=tracer,
+                  checkpoint_dir=str(tmp_path / "ck"), checkpoint_every=3)
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    tracer.save()
+    with open(path) as f:
+        payload = json.load(f)
+    assert validate_trace(payload) == []
+    assert isinstance(payload["traceEvents"], list)
+    names = {e["name"] for e in payload["traceEvents"]}
+    assert {"ingest", "init", "block", "checkpoint"} <= names
+    # every B has ts/pid/tid — the fields Perfetto needs to lay out lanes
+    for ev in payload["traceEvents"]:
+        if ev["ph"] in ("B", "E"):
+            assert {"ts", "pid", "tid"} <= set(ev)
+
+
+def test_validate_trace_catches_malformed():
+    assert validate_trace({}) == ["traceEvents is not a list"]
+    orphan = {"traceEvents": [
+        {"ph": "E", "name": "x", "pid": 1, "tid": 1, "ts": 0.0}]}
+    assert any("orphan E" in p for p in validate_trace(orphan))
+    unclosed = {"traceEvents": [
+        {"ph": "B", "name": "x", "pid": 1, "tid": 1, "ts": 0.0}]}
+    assert any("unclosed B" in p for p in validate_trace(unclosed))
+    dangling = {"traceEvents": [
+        {"ph": "e", "name": "job", "id": "1", "pid": 1, "tid": 1, "ts": 0.0}]}
+    assert any("async e without b" in p for p in validate_trace(dangling))
+
+
+def test_async_lanes_idempotent():
+    """Service restart replay can re-open a live lane or re-close a
+    closed one; the written trace still pairs b/e exactly once."""
+    t = Tracer()
+    t.begin_async("job", 7)
+    t.begin_async("job", 7)  # replayed admission: no-op
+    t.end_async("job", 7)
+    t.end_async("job", 7)  # replayed publish: no-op
+    payload = {"traceEvents": t.events}
+    assert validate_trace(payload) == []
+    assert sum(e["ph"] == "b" for e in t.events) == 1
+    assert sum(e["ph"] == "e" for e in t.events) == 1
+
+
+# --- metrics registry ---------------------------------------------------------
+
+
+def test_metrics_jsonl_and_snapshot(tmp_path):
+    path = str(tmp_path / "m.jsonl")
+    m = Metrics(path)
+    m.inc("widgets", 3)
+    m.gauge("depth", 5.0)
+    m.observe("lat_s", 0.5)
+    m.observe("lat_s", 1.5)
+    m.emit("custom", hello=1)
+    snap = m.snapshot()
+    assert snap["counters"]["widgets"] == 3
+    assert snap["gauges"]["depth"] == 5.0
+    assert snap["summaries"]["lat_s"]["count"] == 2
+    assert snap["summaries"]["lat_s"]["mean"] == pytest.approx(1.0)
+    m.close()
+    lines = [json.loads(l) for l in open(path)]
+    kinds = [l["kind"] for l in lines]
+    assert "custom" in kinds and kinds[-1] == "snapshot"
+
+
+def test_block_monitor_routes_all_timing():
+    """Satellite 6: BlockMonitor is THE block-timing path — it updates
+    the metrics registry and the legacy stats dict together."""
+    from repro.runtime.fault import StepMonitor
+
+    mon = StepMonitor()
+    m = Metrics()
+    stats = {"blocks": 0, "block_s_ema": None, "stragglers": []}
+    bm = BlockMonitor(mon, m, stats)
+    for _ in range(3):
+        with bm:
+            pass
+    assert stats["blocks"] == 3
+    assert stats["block_s_ema"] == mon.ema
+    assert m.counter_value("blocks") == 3
+    assert m.summary("block_s")["count"] == 3
+
+
+def test_counter_helpers():
+    rows = np.array([[1, 1, 0, 0, 16], [0, 1, 1, 3, 15]], np.int32)
+    tot = counters.totals(rows)
+    assert tot == {"cache_hits": 1, "cache_queries": 2, "frozen": 1,
+                   "migrations": 3, "tree_evals": 31}
+    assert counters.hit_rate(tot) == pytest.approx(0.5)
+    assert counters.hit_rate({"cache_hits": 0, "cache_queries": 0}) == 0.0
+
+
+def test_null_tracer_is_inert():
+    with NULL_TRACER.span("x"):
+        pass
+    with NULL_TRACER.maybe_profile(0):
+        pass
+    NULL_TRACER.instant("x")
+    NULL_TRACER.begin_async("x", 1)
+    NULL_TRACER.end_async("x", 1)
+    assert NULL_TRACER.save() is None
+
+
+# --- report summarizer --------------------------------------------------------
+
+
+def test_report_summarizes_run_artifacts(tmp_path, capsys):
+    """End to end: run with --trace/--metrics wiring, then the report
+    module loads + summarizes both artifacts without error."""
+    from repro.obs import report
+
+    X_rows, y, _ = kepler()
+    tpath = str(tmp_path / "t.json")
+    mpath = str(tmp_path / "m.jsonl")
+    tracer, mreg = Tracer(tpath), Metrics(mpath)
+    s = GPSession(pop_size=16, generations=10, kernel="r", backend="jnp",
+                  tracer=tracer, metrics=mreg)
+    s.fit(X_rows, y, key=jax.random.PRNGKey(0))
+    tracer.save()
+    mreg.close()
+    assert report.main([mpath, "--trace", tpath]) == 0
+    out = capsys.readouterr().out
+    assert "trace: valid" in out
+    assert "cache hit rate" in out
+    assert "block" in out
+
+
+def test_absorb_block_telemetry_raw_surface():
+    """The raw evolve_block() door keeps its 2-tuple no-sync contract;
+    absorb_block_telemetry() is the explicit one-sync hook that folds
+    the stashed device counters into stats."""
+    X_rows, y, _ = kepler()
+    s = GPSession(pop_size=16, generations=20, kernel="r", backend="jnp")
+    s.ingest(X_rows, y)
+    s.init(key=jax.random.PRNGKey(0))
+    syncs0 = s.stats["host_syncs"]
+    s.evolve_block(6)
+    assert s.stats["host_syncs"] == syncs0  # dispatch alone never syncs
+    st = s.absorb_block_telemetry()
+    assert s.stats["host_syncs"] == syncs0 + 1
+    assert st["cache_queries"] == 6
+    assert st["tree_evals"] > 0
