@@ -104,6 +104,7 @@ def analyze_cell(json_path: str) -> dict | None:
 
 def gp_eval_cost(pop: int = 512, rows: int = 16384, max_depth: int = 5,
                  n_features: int = 4, kernel: str = "r",
+                 dedup_cap: int | None = None,
                  out_path: str | None = "benchmarks/artifacts/gp_eval_cost.json"):
     """Bytes/FLOPs of one full-population fitness evaluation — the eval
     work of one generation — compiled live for both genome forms.
@@ -121,21 +122,47 @@ def gp_eval_cost(pop: int = 512, rows: int = 16384, max_depth: int = 5,
     point): identical for both forms — they encode the same trees — which
     is what makes useful_ratio the apples-to-apples dispatch-waste metric
     (the tree kernel sweeps all N heap slots; postfix executes only live
-    instructions)."""
+    instructions).
+
+    Three more cells cost the exact-tier subexpression dedup
+    (docs/genomes.md) on a DUPLICATE-HEAVY population (8 distinct
+    genomes tiled to `pop`): `postfix-dup` is the plain jnp evaluator;
+    `postfix-dedup` the ENGAGED dedup eval — one interpreter pass over
+    the `dedup_cap`-row unique table + row gather + epilogue — lowered
+    without its overflow fallback branch (the compiled artifact carries
+    both `cond` arms but executes one; the cost model sums branches, so
+    the fallback is lowered out here); `dedup-plan` the plan build
+    (signature pack + sort + schedule scatter), costed separately
+    because it is int32 bookkeeping on `[P, N]` genomes — independent
+    of `rows`, so it amortizes to nothing as the dataset grows — and
+    because its sort `while`s carry no trip bound, so the `unknown_trip`
+    heuristic (sized for the eval loop) over-charges them. The
+    `dedup_over_plain_flops` summary is the eval-path ratio — the
+    per-generation FLOP reduction the dedup buys, → `cap/pop` of the
+    plain interpreter work as duplication saturates."""
     import dataclasses
 
     import jax
     import jax.numpy as jnp
 
+    from repro.core import eval as core_eval
     from repro.core.fitness import FitnessSpec
     from repro.core.trees import TreeSpec, generate_population, heap_to_postfix
     from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
 
+    if dedup_cap is None:
+        # a tight cap (the bench headline's 512 at pop=1024): the fixed-
+        # shape unique table is interpreted in full, so cap/pop bounds
+        # the dedup eval's share of the plain interpreter work
+        dedup_cap = min(512, max(64, pop // 2))
     spec_t = TreeSpec(max_depth=max_depth, n_features=n_features, n_consts=8)
     spec_p = dataclasses.replace(spec_t, genome="postfix")
     fs = FitnessSpec(kernel)
     op_t, arg_t = generate_population(jax.random.PRNGKey(0), pop, spec_t)
     op_p, arg_p = heap_to_postfix(op_t, arg_t)
+    op_d = jnp.tile(op_p[:8], (pop // 8, 1))
+    arg_d = jnp.tile(arg_p[:8], (pop // 8, 1))
     X = jnp.zeros((n_features, rows), jnp.float32)
     y = jnp.zeros((rows,), jnp.float32)
     const = jnp.asarray(spec_t.const_table())
@@ -143,29 +170,64 @@ def gp_eval_cost(pop: int = 512, rows: int = 16384, max_depth: int = 5,
     active = int(lens.sum())          # total live primitives in the population
     max_len = int(lens.max())         # true bound of the postfix fori_loop
     useful = float(active) * rows     # one flop per (live node × data point)
+    active_d = int((jnp.asarray(op_d) != 0).sum())
+    useful_d = float(active_d) * rows
+    uniq_n, saved_n = (int(v) for v in core_eval.dedup_stats(
+        op_d, arg_d, spec_p, dedup_cap))
 
+    def plain_dup(o, a, X, y):
+        return kref.fitness_ref(o, a, X, y, const, spec_p, fs)
+
+    def build_plan(o, a):
+        return core_eval.build_dedup_plan(o, a, spec_p, dedup_cap)
+
+    def dedup_engaged(plan, X, y):
+        from repro.core.fitness import fitness_from_preds
+
+        preds = core_eval.evaluate_unique_subtrees(
+            plan, X, const, spec_p)[plan.root]
+        return fitness_from_preds(preds, y, fs)
+
+    plan = jax.jit(build_plan)(op_d, arg_d)
+    lowered = {
+        "tree": kops.fitness.lower(op_t, arg_t, X, y, const, tree_spec=spec_t,
+                                   fit_spec=fs),
+        "postfix": kops.fitness.lower(op_p, arg_p, X, y, const,
+                                      tree_spec=spec_p, fit_spec=fs),
+        "postfix-dup": jax.jit(plain_dup).lower(op_d, arg_d, X, y),
+        "postfix-dedup": jax.jit(dedup_engaged).lower(plan, X, y),
+        "dedup-plan": jax.jit(build_plan).lower(op_d, arg_d),
+    }
     cells = []
-    for tag, spec, o, a in (("tree", spec_t, op_t, arg_t),
-                            ("postfix", spec_p, op_p, arg_p)):
-        text = (kops.fitness.lower(o, a, X, y, const, tree_spec=spec,
-                                   fit_spec=fs).compile().as_text())
-        cost = analyze_hlo_text(text, unknown_trip=max_len)
+    for tag, low in lowered.items():
+        cost = analyze_hlo_text(low.compile().as_text(), unknown_trip=max_len)
+        mf = (0.0 if tag == "dedup-plan"
+              else useful_d if tag.startswith("postfix-d") else useful)
         cells.append({
             "genome": tag, "pop": pop, "rows": rows, "max_depth": max_depth,
-            "n_nodes": int(o.shape[1]), "fitness_kernel": kernel,
+            "n_nodes": int(op_p.shape[1]), "fitness_kernel": kernel,
             "max_program_len": max_len,
             "hlo_flops": cost["flops"], "hlo_bytes": cost["bytes"],
             "intensity_flops_per_byte": (cost["flops"] / cost["bytes"]
                                          if cost["bytes"] else 0.0),
-            "model_flops": useful,
-            "useful_ratio": (useful / cost["flops"]) if cost["flops"] else 0.0,
+            "model_flops": mf,
+            "useful_ratio": (mf / cost["flops"]) if cost["flops"] else 0.0,
         })
-    t, p = cells
+        if tag == "postfix-dedup":
+            cells[-1].update(dedup_cap=dedup_cap, unique_subtrees=uniq_n,
+                             subtree_evals_saved=saved_n)
+    by = {c["genome"]: c for c in cells}
+    t, p = by["tree"], by["postfix"]
+    dup, ded = by["postfix-dup"], by["postfix-dedup"]
     summary = {
         "postfix_over_tree_flops": (p["hlo_flops"] / t["hlo_flops"]
                                     if t["hlo_flops"] else 0.0),
         "postfix_over_tree_bytes": (p["hlo_bytes"] / t["hlo_bytes"]
                                     if t["hlo_bytes"] else 0.0),
+        "dedup_over_plain_flops": (ded["hlo_flops"] / dup["hlo_flops"]
+                                   if dup["hlo_flops"] else 0.0),
+        "dedup_over_plain_bytes": (ded["hlo_bytes"] / dup["hlo_bytes"]
+                                   if dup["hlo_bytes"] else 0.0),
     }
     if out_path:
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -175,16 +237,20 @@ def gp_eval_cost(pop: int = 512, rows: int = 16384, max_depth: int = 5,
 
 
 def fmt_gp_table(cells, summary) -> str:
-    head = (f"{'genome':8s} {'pop':>6s} {'rows':>7s} {'GFLOPs':>9s} "
+    head = (f"{'genome':14s} {'pop':>6s} {'rows':>7s} {'GFLOPs':>9s} "
             f"{'GBytes':>9s} {'flops/B':>8s} {'useful':>7s}")
     lines = [head, "-" * len(head)]
     for c in cells:
         lines.append(
-            f"{c['genome']:8s} {c['pop']:6d} {c['rows']:7d} "
+            f"{c['genome']:14s} {c['pop']:6d} {c['rows']:7d} "
             f"{c['hlo_flops']/1e9:9.3f} {c['hlo_bytes']/1e9:9.3f} "
             f"{c['intensity_flops_per_byte']:8.3f} {c['useful_ratio']:7.3f}")
     lines.append(f"postfix/tree  flops ×{summary['postfix_over_tree_flops']:.3f}"
                  f"  bytes ×{summary['postfix_over_tree_bytes']:.3f}")
+    cap = next((c["dedup_cap"] for c in cells if "dedup_cap" in c), "?")
+    lines.append(f"dedup/plain   flops ×{summary['dedup_over_plain_flops']:.3f}"
+                 f"  bytes ×{summary['dedup_over_plain_bytes']:.3f}"
+                 f"  (dup-heavy pop, cap={cap}, plan costed separately)")
     return "\n".join(lines)
 
 
@@ -224,7 +290,8 @@ if __name__ == "__main__":
             pop=int(kv.get("pop", 512)), rows=int(kv.get("rows", 16384)),
             max_depth=int(kv.get("max_depth", 5)),
             n_features=int(kv.get("n_features", 4)),
-            kernel=kv.get("kernel", "r"))
+            kernel=kv.get("kernel", "r"),
+            dedup_cap=(int(kv["dedup_cap"]) if "dedup_cap" in kv else None))
         print(fmt_gp_table(cells, summary))
     else:
         rows = build_table(*(sys.argv[1:] or []))

@@ -255,11 +255,22 @@ def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
     representation (identical semantics, pinned bitwise by tests). Each
     point reports both kernels' best-of-several warm runs interleaved
     (robust to background load); `postfix_speedup_headline` is the
-    P>=512, depth-5 (N=63) point the perf trajectory tracks."""
+    P>=512, depth-5 (N=63) point the perf trajectory tracks.
+
+    Each point also times the exact-tier subexpression dedup
+    (docs/genomes.md) on a DUPLICATE-HEAVY population — 8 distinct
+    genomes tiled to `pop`, the shape a converged GP population takes —
+    dedup-off vs dedup-on (tight `dedup_cap=512` unique table)
+    interleaved, on the jnp impl: the Pallas path runs in interpret
+    mode off-TPU, where emulation overhead would swamp the kernel, so
+    the jnp pair is the honest CPU measurement. `dedup_speedup` rides
+    each cell with the population's measured duplicate-subtree rate;
+    `dedup_speedup_headline` is the P=1024, N=63, D=32k point."""
     import dataclasses
 
     import numpy as np
 
+    from repro.core import eval as core_eval
     from repro.core.fitness import FitnessSpec
     from repro.core.trees import TreeSpec, generate_population, heap_to_postfix
     from repro.kernels import ops as kops
@@ -267,13 +278,18 @@ def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
     points = ((128, 4, 8_192), (512, 5, 16_384), (1024, 5, 32_768))
     rounds = max(3, min(7, gens))
     fit_spec = FitnessSpec(kernel="r")
+    dedup_cap = 512
     cells = []
     headline = None
+    dedup_headline = None
     for pop, depth, rows in points:
         spec_t = TreeSpec(max_depth=depth, n_features=4, n_consts=8)
         spec_p = dataclasses.replace(spec_t, genome="postfix")
         op_t, arg_t = generate_population(jax.random.PRNGKey(seed), pop, spec_t)
         op_p, arg_p = heap_to_postfix(op_t, arg_t)
+        # duplicate-heavy population: 8 distinct genomes tiled to pop
+        op_d = jax.numpy.tile(op_p[:8], (pop // 8, 1))
+        arg_d = jax.numpy.tile(arg_p[:8], (pop // 8, 1))
         r = np.random.RandomState(seed)
         X = jax.numpy.asarray(r.randn(4, rows).astype(np.float32))
         y = jax.numpy.asarray(r.randn(rows).astype(np.float32))
@@ -283,9 +299,18 @@ def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
                 o, a, X, y, const, s, fit_spec, impl=impl)),
             "postfix": jax.jit(lambda s=spec_p, o=op_p, a=arg_p: kops.fitness(
                 o, a, X, y, const, s, fit_spec, impl=impl)),
+            "dedup_off": jax.jit(lambda: kops.fitness(
+                op_d, arg_d, X, y, const, spec_p, fit_spec, impl="jnp")),
+            "dedup_on": jax.jit(lambda: kops.fitness(
+                op_d, arg_d, X, y, const, spec_p, fit_spec, impl="jnp",
+                dedup="exact", dedup_cap=dedup_cap)),
         }
+        uniq, saved = (int(v) for v in core_eval.dedup_stats(
+            op_d, arg_d, spec_p, dedup_cap))
         cell = {"pop": pop, "depth": depth, "nodes": spec_t.num_nodes,
-                "rows": rows}
+                "rows": rows, "dedup_cap": dedup_cap,
+                "unique_subtrees": uniq, "subtree_evals_saved": saved,
+                "duplicate_rate": round(saved / (saved + uniq), 4)}
         best = {}
         for tag, f in runs.items():
             jax.block_until_ready(f())  # compile
@@ -299,9 +324,12 @@ def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
             cell[f"{tag}_s"] = round(dt, 5)
             cell[f"{tag}_trees_rows_per_sec"] = round(pop * rows / dt, 1)
         cell["postfix_speedup"] = round(best["tree"] / best["postfix"], 3)
+        cell["dedup_speedup"] = round(best["dedup_off"] / best["dedup_on"], 3)
         cells.append(cell)
         if headline is None and pop >= 512 and spec_t.num_nodes >= 63:
             headline = cell["postfix_speedup"]
+        if pop >= 1024 and spec_t.num_nodes >= 63:
+            dedup_headline = cell["dedup_speedup"]
     return {
         "bench": "eval",
         "backend": impl,
@@ -309,6 +337,8 @@ def bench_eval(*, gens: int = GENS, seed: int = 0, impl: str = "pallas",
         "rounds": rounds,
         "points": cells,
         "postfix_speedup_headline": headline,
+        "dedup_speedup_headline": dedup_headline,
+        "dedup_impl": "jnp",
         "jax": jax.__version__,
         "device": jax.devices()[0].platform,
         "machine": platform.machine(),

@@ -66,11 +66,24 @@ class GPConfig:
     eval_impl: str = "jnp"  # any jittable name in repro.gp.backends
     data_tile: int = 1024  # pallas data-tile (lane-dim multiple of 128)
     elite_cache: bool = True  # skip re-evaluating unchanged elites
+    # population-wide subexpression dedup (postfix genomes; docs/genomes.md):
+    #   "off"      plain per-tree evaluation
+    #   "exact"    evaluate each distinct subtree once per generation —
+    #              BITWISE identical to "off" by construction (default)
+    #   "semantic" exact tier + the elite fitness cache also keys on
+    #              probe-batch output fingerprints (tolerance-pinned, may
+    #              serve a cached fitness for a syntactically different
+    #              but probe-equal elite)
+    dedup: str = "exact"
+    dedup_cap: int = 0  # unique-table rows; 0 = auto (max(64, pop rows))
     island: IslandConfig = IslandConfig()  # population layout + migration
     migrate_every: int = 10  # legacy alias for island.migrate_every
     migrate_k: int = 4  # legacy alias for island.migrate_k
 
     def __post_init__(self):
+        if self.dedup not in ("off", "exact", "semantic"):
+            raise ValueError(f"dedup must be 'off', 'exact' or 'semantic', "
+                             f"got {self.dedup!r}")
         # fold a non-default flat alias into `island` ONLY where the
         # island itself still holds the default — an explicit
         # IslandConfig value always wins, so replacing the island on a
@@ -88,7 +101,8 @@ class GPConfig:
         return hash((self.name, self.pop_size, self.tree_spec, self.fitness, self.mix,
                      self.tourn_size, self.generations, self.elitism, self.parsimony,
                      self.stop_fitness, self.eval_impl,
-                     self.data_tile, self.elite_cache, self.island))
+                     self.data_tile, self.elite_cache, self.dedup,
+                     self.dedup_cap, self.island))
 
 
 def cache_width(cfg: GPConfig) -> int:
@@ -143,11 +157,33 @@ class GPState(NamedTuple):
     cache_fit: jax.Array  # float32[E]
 
 
+def _dedup_kwargs(cfg: GPConfig, fn) -> dict:
+    """The dedup kwargs to forward to a backend callable — {} when dedup
+    is off, or when the callable predates the dedup contract (a
+    user-registered backend without the kwargs keeps working; it simply
+    never dedups)."""
+    import inspect
+
+    if cfg.dedup == "off":
+        return {}
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return {}
+    if "dedup" in params or any(p.kind == p.VAR_KEYWORD
+                                for p in params.values()):
+        return {"dedup": cfg.dedup, "dedup_cap": cfg.dedup_cap}
+    return {}
+
+
 def _eval_fitness(cfg: GPConfig, op, arg, X, y, weight, const_table):
     """Dispatch to the EvalBackend registered under `cfg.eval_impl`
     (repro.gp.backends — pallas fused kernel, jnp tiled reference, or any
     user-registered jittable backend). `weight` is the dataset-padding
-    mask (f32[D], 0.0 on padded points) or None for unpadded data."""
+    mask (f32[D], 0.0 on padded points) or None for unpadded data.
+    `cfg.dedup`/`cfg.dedup_cap` ride along to backends that take them —
+    the exact-tier subexpression dedup is a backend-internal, bitwise
+    detail of how the population gets evaluated."""
     from repro.gp.backends import get_backend
 
     backend = get_backend(cfg.eval_impl)
@@ -156,7 +192,8 @@ def _eval_fitness(cfg: GPConfig, op, arg, X, y, weight, const_table):
             f"eval backend {backend.name!r} is host-only and cannot run inside "
             f"the jitted generation step; drive it through repro.gp.GPSession")
     return backend.fitness(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
-                           weight=weight, data_tile=cfg.data_tile)
+                           weight=weight, data_tile=cfg.data_tile,
+                           **_dedup_kwargs(cfg, backend.fitness))
 
 
 def _eval_moments(cfg: GPConfig, op, arg, X, y, weight, const_table):
@@ -164,7 +201,9 @@ def _eval_moments(cfg: GPConfig, op, arg, X, y, weight, const_table):
     under `cfg.eval_impl`: f32[P, M] weighted moment partials for THIS
     shard's data. The mesh step `psum`s them across the data axis and
     finalizes with `FitnessKernel.reduce_moments` — how non-decomposable
-    objectives (pearson, r2) run on any `MeshTopology`."""
+    objectives (pearson, r2) run on any `MeshTopology`. Dedup engages
+    per shard (each shard dedups its own population slice), bitwise like
+    the single-device path."""
     from repro.gp.backends import get_backend
 
     backend = get_backend(cfg.eval_impl)
@@ -173,7 +212,8 @@ def _eval_moments(cfg: GPConfig, op, arg, X, y, weight, const_table):
             f"eval backend {backend.name!r} exposes no moment pass and cannot "
             f"evaluate fitness under a data-sharded mesh")
     return backend.moments(op, arg, X, y, const_table, cfg.tree_spec, cfg.fitness,
-                           weight=weight, data_tile=cfg.data_tile)
+                           weight=weight, data_tile=cfg.data_tile,
+                           **_dedup_kwargs(cfg, backend.moments))
 
 
 def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
@@ -228,7 +268,24 @@ def init_state(cfg: GPConfig, key, seeds=None, feature_names=None) -> GPState:
     )
 
 
-def _cached_fitness(state: GPState, eval_rows):
+def _semantic_hit(state_slice, cache_slice, cache_fit, probe):
+    """Tier-2 (semantic) cache predicate: the candidate head rows produce
+    BITWISE the same outputs as the cached rows on the probe batch
+    (`probe(op, arg) -> f32[..., rows, Dp]`). Guarded on an all-finite
+    cached fitness so the zero-initialized cache — whose all-EMPTY rows
+    probe to 0.0, as would a legitimate x-minus-x elite — can never serve
+    its +inf sentinel. Collision bound: a false hit needs the two
+    genomes to agree on every one of the Dp probe points yet differ
+    somewhere on the full dataset (see docs/genomes.md); the parity
+    contract for dedup="semantic" is therefore tolerance-pinned, not
+    bitwise."""
+    (s_op, s_arg) = state_slice
+    (c_op, c_arg) = cache_slice
+    return (jnp.all(probe(s_op, s_arg) == probe(c_op, c_arg))
+            & jnp.all(jnp.isfinite(cache_fit)))
+
+
+def _cached_fitness(state: GPState, eval_rows, probe=None):
     """Evaluate `state`'s population, serving rows [:E] from the elite
     fitness cache when the cached genomes match exactly.
 
@@ -237,12 +294,21 @@ def _cached_fitness(state: GPState, eval_rows):
     static plumbing. Every eval path is row-independent, so splitting
     the population at E (and skipping the head on a hit — the cached
     value IS last generation's evaluation of the identical rows) is
-    bitwise-identical to one full evaluation."""
+    bitwise-identical to one full evaluation.
+
+    `probe` (dedup="semantic" only) widens the hit predicate: a head
+    whose PROBE outputs match the cache's also serves the cached fitness
+    — recurring-but-rewritten elites hit across generations, at the cost
+    of the documented probe-collision bound (`_semantic_hit`)."""
     E = state.cache_op.shape[0]
     if not E:
         return eval_rows(state.op, state.arg)
     hit = (jnp.all(state.op[:E] == state.cache_op)
            & jnp.all(state.arg[:E] == state.cache_arg))
+    if probe is not None:
+        hit = hit | _semantic_hit(
+            (state.op[:E], state.arg[:E]),
+            (state.cache_op, state.cache_arg), state.cache_fit, probe)
     tail = eval_rows(state.op[E:], state.arg[E:])
     head = jax.lax.cond(
         hit, lambda: state.cache_fit,
@@ -264,13 +330,39 @@ def _new_cache(state: GPState, fitness, sel_fitness, E: int):
     return cache_op, cache_arg, cache_fit
 
 
+_PROBE_COLS = 32  # semantic-tier fingerprint batch (first Dp data columns)
+
+
+def _probe_fn(cfg: GPConfig, X, const_table):
+    """Semantic-tier fingerprint closure, or None unless
+    cfg.dedup == "semantic": evaluate rows on the first
+    min(D, _PROBE_COLS) data columns — a fixed slice of the live
+    dataset, so no extra state leaf rides GPState/checkpoints. Island
+    inputs ([I, R, N]) flatten into one evaluator call."""
+    if cfg.dedup != "semantic":
+        return None
+    from repro.core.eval import evaluate_population
+
+    Dp = min(X.shape[1], _PROBE_COLS)
+    Xp = jax.lax.slice_in_dim(X, 0, Dp, axis=1)
+
+    def probe(o, a):
+        N = o.shape[-1]
+        flat = evaluate_population(o.reshape(-1, N), a.reshape(-1, N), Xp,
+                                   const_table, cfg.tree_spec)
+        return flat.reshape(*o.shape[:-1], Dp)
+
+    return probe
+
+
 def _step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
     """One generation's computation — shared verbatim by the per-step jit
     (`evolve_step`) and the scanned block (`evolve_block`), so K scanned
     steps are bitwise-identical to K dispatched steps."""
     const_table = cfg.tree_spec.const_table()
     fitness = _cached_fitness(
-        state, lambda o, a: _eval_fitness(cfg, o, a, X, y, weight, const_table))
+        state, lambda o, a: _eval_fitness(cfg, o, a, X, y, weight, const_table),
+        probe=_probe_fn(cfg, X, const_table))
     # best tracked on RAW fitness; selection may add parsimony pressure
     i = jnp.argmin(fitness)
     improved = fitness[i] < state.best_fitness
@@ -334,6 +426,11 @@ def _island_step_body(cfg: GPConfig, state: GPState, X, y, weight) -> GPState:
         # migrate_k slots), so the all-or-nothing gate costs nothing.
         hit = (jnp.all(state.op[:, :E] == state.cache_op)
                & jnp.all(state.arg[:, :E] == state.cache_arg))
+        probe = _probe_fn(cfg, X, const_table)
+        if probe is not None:
+            hit = hit | _semantic_hit(
+                (state.op[:, :E], state.arg[:, :E]),
+                (state.cache_op, state.cache_arg), state.cache_fit, probe)
         tail = eval_rows(state.op[:, E:], state.arg[:, E:])
         head = jax.lax.cond(
             hit, lambda: state.cache_fit,
@@ -407,12 +504,21 @@ def _counter_row(cfg: GPConfig, state: GPState, done=None, *, mesh=False,
     on/off to bitwise-identical trajectories with zero recompiles.
 
     `done` is the block's freeze predicate for this step (None = the
-    block can never freeze); a frozen step reports [0, 0, 1, 0, 0] —
-    its compute ran and was discarded. With `mesh=True` every quantity
-    is replicated across shards (cache columns are 0 there: the elite
-    cache is host/single-device machinery) so the counter stream's
-    out_spec is P(); `n_pods` sizes the classic mesh pod-ring migration
-    count."""
+    block can never freeze); a frozen step reports
+    [0, 0, 1, 0, 0, 0, 0] — its compute ran and was discarded. With
+    `mesh=True` every quantity is replicated across shards (cache AND
+    dedup columns are 0 there: the elite cache is host/single-device
+    machinery, and re-running the dedup signature sort per shard purely
+    for telemetry would double the mesh's plan cost) so the counter
+    stream's out_spec is P(); `n_pods` sizes the classic mesh pod-ring
+    migration count.
+
+    The dedup columns (SUBTREE_EVALS_SAVED, UNIQUE_SUBTREES) recompute
+    `eval.dedup_stats` on the PRE-step population — unconditional given
+    cfg (static), so telemetry on/off stays bitwise with no recompile
+    and no extra host sync, the PR-9 pins. They are 0 when
+    cfg.dedup == "off", on non-postfix genomes, and on overflow (the
+    eval path then ran the plain interpreter)."""
     I = cfg.island.islands
     island = I > 1
     zero = jnp.asarray(0, jnp.int32)
@@ -440,10 +546,20 @@ def _counter_row(cfg: GPConfig, state: GPState, done=None, *, mesh=False,
         migrations = jnp.where(due, n_pods, 0).astype(jnp.int32)
     else:
         migrations = zero
-    row = jnp.stack([hit, queries, zero, migrations, evals])
+    if mesh or cfg.dedup == "off" or cfg.tree_spec.genome != "postfix":
+        saved = uniq = zero
+    else:
+        from repro.core.eval import dedup_stats, resolve_dedup_cap
+
+        N = cfg.tree_spec.num_nodes
+        o = state.op.reshape(-1, N)
+        a = state.arg.reshape(-1, N)
+        cap = resolve_dedup_cap(cfg.dedup_cap, o.shape[0], N)
+        uniq, saved = dedup_stats(o, a, cfg.tree_spec, cap)
+    row = jnp.stack([hit, queries, zero, migrations, evals, saved, uniq])
     if done is None:
         return row
-    return jnp.where(done, jnp.asarray([0, 0, 1, 0, 0], jnp.int32), row)
+    return jnp.where(done, jnp.asarray([0, 0, 1, 0, 0, 0, 0], jnp.int32), row)
 
 
 def _block_done(cfg: GPConfig, state: GPState, i, limit):
@@ -664,7 +780,8 @@ def _switch_fitness(kernels: tuple, preds, y, w, kernel_id, n_classes, precision
 
 def _tenant_slot_step(spec: TreeSpec, kernels: tuple, tourn_draw: int,
                       elitism: int, sub: TenantState, Xi, yi, wi,
-                      p: TenantParams) -> TenantState:
+                      p: TenantParams, dedup: str = "off",
+                      dedup_cap: int = 0) -> TenantState:
     """One generation of ONE slot — deliberately the solo `_step_body`
     re-derived on un-batched leaves (evaluate → whole-dataset fitness →
     champion → split/breed → freeze), because the tenant batch runs it
@@ -675,13 +792,22 @@ def _tenant_slot_step(spec: TreeSpec, kernels: tuple, tourn_draw: int,
     rounding). The freeze predicate is computed on the PRE-step state,
     matching `_block_done`; a frozen (done or empty) slot's step
     computes and discards, like every freeze in this engine."""
-    from repro.core.eval import evaluate_population
+    from repro.core.eval import (evaluate_population,
+                                 evaluate_population_dedup, resolve_dedup_cap)
 
     active = tenant_active(sub, p)
     const_table = spec.const_table()
+    use_dedup = dedup != "off" and spec.genome == "postfix"
 
     def eval_rows(o, a):  # f32[rows]; row-independent, so slicing is exact
-        preds = evaluate_population(o, a, Xi, const_table, spec)
+        if use_dedup:
+            # each slice dedups independently — bitwise equal to the
+            # plain interpreter on the same rows, so packed-vs-solo and
+            # dedup-on-vs-off parity both stay bitwise
+            cap = resolve_dedup_cap(dedup_cap, o.shape[0], o.shape[1])
+            preds = evaluate_population_dedup(o, a, Xi, const_table, spec, cap)
+        else:
+            preds = evaluate_population(o, a, Xi, const_table, spec)
         return _switch_fitness(kernels, preds, yi, wi, p.kernel_id,
                                p.n_classes, p.precision)
 
@@ -722,13 +848,17 @@ def _tenant_slot_step(spec: TreeSpec, kernels: tuple, tourn_draw: int,
 
 def tenant_step(spec: TreeSpec, kernels: tuple, tourn_draw: int, elitism: int,
                 state: TenantState, X, y, weight,
-                params: TenantParams) -> TenantState:
+                params: TenantParams, dedup: str = "off",
+                dedup_cap: int = 0) -> TenantState:
     """One generation of the whole batch: `lax.map` of the slot step over
     the island axis. X f32[I, F, Dc], y f32[I, Dc], weight f32[I, Dc] —
     every slot carries its OWN (padded, zero-weight-masked) dataset
-    slice, so heterogeneous jobs never evaluate each other's data."""
+    slice, so heterogeneous jobs never evaluate each other's data.
+    `dedup`/`dedup_cap` (static) engage the exact-tier subexpression
+    dedup inside each slot's evaluation — bitwise-identical results."""
     return jax.lax.map(
-        lambda t: _tenant_slot_step(spec, kernels, tourn_draw, elitism, *t),
+        lambda t: _tenant_slot_step(spec, kernels, tourn_draw, elitism, *t,
+                                    dedup=dedup, dedup_cap=dedup_cap),
         (state, X, y, weight, params))
 
 
@@ -740,7 +870,10 @@ def _tenant_counter_row(state: TenantState, params: TenantParams):
     or empty — whose compute runs and is discarded this generation;
     TREE_EVALS sums each active slot's non-cache-served rows. Computed
     unconditionally, like every counter row, so the service's
-    no-recompile guarantee is untouched."""
+    no-recompile guarantee is untouched. The dedup columns are 0 here,
+    like the cache columns on a mesh: slot steps dedup their own row
+    slices under `lax.map`, and re-running the signature sort per slot
+    purely for telemetry would double the batch's plan cost."""
     E = state.cache_op.shape[1]
     P_ = state.op.shape[1]
     a32 = tenant_active(state, params).astype(jnp.int32)
@@ -755,12 +888,13 @@ def _tenant_counter_row(state: TenantState, params: TenantParams):
         hits = queries = jnp.asarray(0, jnp.int32)
     frozen = (1 - a32).sum()
     evals = (a32 * (P_ - h32 * E)).sum()
-    return jnp.stack([hits, queries, frozen, jnp.asarray(0, jnp.int32),
-                      evals])
+    zero = jnp.asarray(0, jnp.int32)
+    return jnp.stack([hits, queries, frozen, zero, evals, zero, zero])
 
 
 def build_tenant_block(spec: TreeSpec, kernels: tuple, tourn_draw: int,
-                       elitism: int, n_steps: int):
+                       elitism: int, n_steps: int, *, dedup: str = "off",
+                       dedup_cap: int = 0):
     """The service's ONE compiled program: block(state, X, y, weight,
     params) -> (state, history f32[n_steps, I], counters
     int32[n_steps, C]) scanning `tenant_step` `n_steps` generations per
@@ -781,7 +915,8 @@ def build_tenant_block(spec: TreeSpec, kernels: tuple, tourn_draw: int,
         def body(s, _):
             row = _tenant_counter_row(s, params)
             nxt = tenant_step(spec, kernels, tourn_draw, elitism, s, X, y,
-                              weight, params)
+                              weight, params, dedup=dedup,
+                              dedup_cap=dedup_cap)
             return nxt, (nxt.best_fitness, row)
 
         st, (hist, counters) = jax.lax.scan(body, state, None,

@@ -342,6 +342,74 @@ def postfix_lhs_index(op) -> jnp.ndarray:
     return lhs
 
 
+# --- subexpression signatures (population-wide dedup, core/eval.py) ----------
+
+
+def signature_geometry(spec: TreeSpec, num_nodes: int) -> tuple[int, int, int]:
+    """(bits, per_word, n_words) of the packed subtree signature.
+
+    A subexpression's canonical form is its postfix token stream with
+    terminal arguments embedded: token code = 1 + op·K + arg (arg only
+    for terminals; K = max(n_features, n_consts) so FEATURE/CONST args
+    never collide across opcodes), 0 reserved for "no token". Codes are
+    < 2**bits, so packing `per_word = 30 // bits` codes per int32 word
+    (top bits unused — no sign-bit surprises) is injective: equal packed
+    words ⟺ equal token streams ⟺ the same subexpression, because
+    postfix with known arities parses unambiguously and active codes are
+    ≥ 1 (zero-padding cannot alias a shorter stream onto a longer one)."""
+    K = max(spec.n_features, spec.n_consts, 1)
+    bits = (prim.N_OPCODES * K).bit_length()
+    per_word = 30 // bits
+    if per_word < 1:
+        raise ValueError(
+            f"subexpression signatures need token codes ≤ 30 bits; "
+            f"n_features/n_consts = {spec.n_features}/{spec.n_consts} "
+            f"needs {bits}")
+    n_words = -(-num_nodes // per_word)
+    return bits, per_word, n_words
+
+
+def subtree_signatures(op, arg, spec: TreeSpec) -> jnp.ndarray:
+    """int32[P, N, W] packed canonical signature of the subexpression
+    ENDING at every position of every postfix row (W from
+    `signature_geometry`). Two positions — in the same row or across the
+    whole population — carry the identical signature iff they end the
+    identical subexpression. Inactive (EMPTY) positions get the all-zero
+    signature, which no active subexpression can produce. This is the
+    device-side canonicalization step of the population-wide dedup layer
+    (core/eval.build_dedup_plan)."""
+    op = jnp.asarray(op)
+    arg = jnp.asarray(arg)
+    P, N = op.shape
+    bits, per_word, W = signature_geometry(spec, N)
+    K = max(spec.n_features, spec.n_consts, 1)
+
+    ar = jnp.asarray(prim.ARITY)[op]
+    active = op != prim.EMPTY
+    code = jnp.where(active,
+                     1 + op * K + jnp.where(ar == 0, jnp.clip(arg, 0, K - 1), 0),
+                     0).astype(jnp.int32)
+    start = subtree_spans(op)
+    length = jnp.arange(N, dtype=jnp.int32)[None, :] - start + 1
+
+    t = jnp.arange(N, dtype=jnp.int32)
+
+    def one(code_row, start_row, len_row, act_row):
+        idx = start_row[:, None] + t[None, :]  # [N, N] span positions
+        g = code_row[jnp.clip(idx, 0, N - 1)]
+        mask = (t[None, :] < len_row[:, None]) & act_row[:, None]
+        return jnp.where(mask, g, 0)
+
+    sig = jax.vmap(one)(code, start, length, active)  # [P, N, N]
+    pad = W * per_word - N
+    if pad:
+        sig = jnp.pad(sig, ((0, 0), (0, 0), (0, pad)))
+    sig = sig.reshape(P, N, W, per_word)
+    shifts = (jnp.arange(per_word, dtype=jnp.int32) * bits)
+    return jnp.sum(sig << shifts[None, None, None, :], axis=-1,
+                   dtype=jnp.int32)
+
+
 # --- host-side pretty printing (archive/display, like fx_display_) ----------
 
 

@@ -55,6 +55,12 @@ class EvalBackend:
     the unpadded one. `jittable` backends run inside the engine's jitted
     generation step (and under shard_map on a mesh); host-only backends
     are driven by GPSession's host generation loop instead.
+
+    fitness/moments/stream_moments also accept `dedup`/`dedup_cap`
+    (static): any value other than ``"off"`` engages the exact-tier
+    population-wide subexpression dedup for postfix genomes — each
+    distinct subtree evaluated once per call, bitwise-identical results.
+    Backends may ignore the flag (the scalar baseline does).
     """
 
     name: str
@@ -119,53 +125,56 @@ def _jnp_evaluate(op, arg, X, const_table, tree_spec):
 
 
 def _jnp_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
-                 data_tile=1024):
+                 data_tile=1024, dedup="off", dedup_cap=0):
     from repro.kernels.ref import fitness_ref_tiled
 
     return fitness_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec,
-                             weight=weight)
+                             weight=weight, dedup=dedup, dedup_cap=dedup_cap)
 
 
 def _jnp_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
-                 data_tile=1024):
+                 data_tile=1024, dedup="off", dedup_cap=0):
     from repro.kernels.ref import moments_ref_tiled
 
     return moments_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec,
-                             weight=weight)
+                             weight=weight, dedup=dedup, dedup_cap=dedup_cap)
 
 
 def _pallas_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
-                    data_tile=1024):
+                    data_tile=1024, dedup="off", dedup_cap=0):
     from repro.kernels import ops as kops
 
     return kops.fitness(op, arg, X, y, const_table, tree_spec, fit_spec,
-                        weight=weight, data_tile=data_tile)
+                        weight=weight, data_tile=data_tile, dedup=dedup,
+                        dedup_cap=dedup_cap)
 
 
 def _pallas_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
-                    data_tile=1024):
+                    data_tile=1024, dedup="off", dedup_cap=0):
     from repro.kernels import ops as kops
 
     return kops.moments(op, arg, X, y, const_table, tree_spec, fit_spec,
-                        weight=weight, data_tile=data_tile)
+                        weight=weight, data_tile=data_tile, dedup=dedup,
+                        dedup_cap=dedup_cap)
 
 
 def _jnp_stream_moments(acc, op, arg, X, y, const_table, tree_spec, fit_spec,
-                        weight=None, data_tile=1024):
+                        weight=None, data_tile=1024, dedup="off", dedup_cap=0):
     from repro.kernels import ops as kops
 
     return kops.stream_moments(acc, op, arg, X, y, const_table, tree_spec,
                                fit_spec, weight=weight, data_tile=data_tile,
-                               impl="jnp")
+                               impl="jnp", dedup=dedup, dedup_cap=dedup_cap)
 
 
 def _pallas_stream_moments(acc, op, arg, X, y, const_table, tree_spec, fit_spec,
-                           weight=None, data_tile=1024):
+                           weight=None, data_tile=1024, dedup="off",
+                           dedup_cap=0):
     from repro.kernels import ops as kops
 
     return kops.stream_moments(acc, op, arg, X, y, const_table, tree_spec,
                                fit_spec, weight=weight, data_tile=data_tile,
-                               impl="pallas")
+                               impl="pallas", dedup=dedup, dedup_cap=dedup_cap)
 
 
 def _scalar_evaluate(op, arg, X, const_table, tree_spec):
@@ -178,7 +187,9 @@ def _scalar_evaluate(op, arg, X, const_table, tree_spec):
 
 
 def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
-                    data_tile=1024):
+                    data_tile=1024, dedup="off", dedup_cap=0):
+    # dedup ignored: the scalar baseline exists to be measured against,
+    # and the exact tier is bitwise-identical by contract anyway
     from repro.core.scalar_eval import fitness_scalar
 
     X_rows = np.ascontiguousarray(np.asarray(X, np.float32).T)
@@ -191,7 +202,7 @@ def _scalar_fitness(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None
 
 
 def _scalar_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None,
-                    data_tile=1024):
+                    data_tile=1024, dedup="off", dedup_cap=0):
     # the scalar backend is host-only and never runs under shard_map; the
     # moment pass exists so host-side tools can inspect every backend
     # through one contract
@@ -204,7 +215,8 @@ def _scalar_moments(op, arg, X, y, const_table, tree_spec, fit_spec, weight=None
 
 
 def _scalar_stream_moments(acc, op, arg, X, y, const_table, tree_spec, fit_spec,
-                           weight=None, data_tile=1024):
+                           weight=None, data_tile=1024, dedup="off",
+                           dedup_cap=0):
     # host fold: scalar evaluation of the chunk, then the kernel's merge —
     # the streaming contract holds on the paper-faithful baseline too
     from repro.core.fitness import get_kernel

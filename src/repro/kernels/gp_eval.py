@@ -276,6 +276,150 @@ def eval_fitness_pallas_postfix(op, arg, lens, X, y, weight,
       weight.astype(jnp.float32), const_table.astype(jnp.float32))
 
 
+def _fitness_from_subtrees_kernel(root_ref, uniq_ref, y_ref, w_ref, out_ref,
+                                  *, kernel: str, n_classes: int,
+                                  precision: float):
+    """One (pop_tile, data_tile) block of the dedup'd eval: predictions
+    are a row-gather from the precomputed unique-subexpression scratch
+    (core/eval.evaluate_unique_subtrees), so the per-tree work collapses
+    to ONE take plus the fused moment epilogue — the interpreter ran
+    once per DISTINCT subtree, not once per tree."""
+    j = pl.program_id(1)
+    root = root_ref[...]  # int32[Pb]
+    uniq = uniq_ref[...]  # f32[U, Db]
+    preds = jnp.take(uniq, jnp.clip(root, 0, uniq.shape[0] - 1), axis=0)
+
+    # ---- identical fused moment epilogue to the interpreter kernels --------
+    y = y_ref[...]
+    wgt = w_ref[...]
+    spec = fit.FitnessSpec(kernel, n_classes=n_classes, precision=precision)
+    kern = fit.get_kernel(kernel)
+    partial = kern.moments(preds, y, wgt, spec)  # [Pb, M]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = kern.merge_moments(out_ref[...], partial, spec)
+
+
+def eval_fitness_pallas_from_subtrees(root, uniq, y, weight, *,
+                                      kernel: str = "r", n_classes: int = 3,
+                                      precision: float = 1e-4,
+                                      pop_tile: int = 8,
+                                      data_tile: int = 1024,
+                                      interpret: bool | None = None):
+    """Fused gather+moments over precomputed unique-subtree outputs.
+
+    root:  int32[P]     unique-slot id per tree (DedupPlan.root),
+                        P % pop_tile == 0
+    uniq:  f32[U, D]    unique-subexpression values, D % data_tile == 0
+    returns f32[P, M]   accumulated weighted moments — same contract,
+                        same (pop, data) grid, same j==0/j!=0 merge
+                        order as eval_fitness_pallas_postfix, so moments
+                        are BITWISE identical whenever the tile geometry
+                        matches the plain kernel's.
+    """
+    (P,) = root.shape
+    U, D = uniq.shape
+    assert P % pop_tile == 0 and D % data_tile == 0, (P, D, pop_tile, data_tile)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_moments = fit.get_kernel(kernel).n_moments
+
+    grid = (P // pop_tile, D // data_tile)
+    body = functools.partial(
+        _fitness_from_subtrees_kernel, kernel=kernel, n_classes=n_classes,
+        precision=precision)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pop_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((U, data_tile), lambda i, j: (0, j)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((pop_tile, n_moments), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, n_moments), jnp.float32),
+        interpret=interpret,
+    )(root, uniq.astype(jnp.float32), y.astype(jnp.float32),
+      weight.astype(jnp.float32))
+
+
+def _fitness_from_preds_kernel(preds_ref, y_ref, w_ref, out_ref, *,
+                               kernel: str, n_classes: int, precision: float):
+    """One (pop_tile, data_tile) block of the spilled dedup epilogue:
+    predictions were gathered from the unique-subtree table at the XLA
+    level (HBM-resident `uniq[root]`), so the block only streams its own
+    pop_tile rows — no U-row scratch in VMEM."""
+    j = pl.program_id(1)
+    preds = preds_ref[...]  # f32[Pb, Db]
+
+    # ---- identical fused moment epilogue to the interpreter kernels --------
+    y = y_ref[...]
+    wgt = w_ref[...]
+    spec = fit.FitnessSpec(kernel, n_classes=n_classes, precision=precision)
+    kern = fit.get_kernel(kernel)
+    partial = kern.moments(preds, y, wgt, spec)  # [Pb, M]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = kern.merge_moments(out_ref[...], partial, spec)
+
+
+def eval_fitness_pallas_from_preds(preds, y, weight, *, kernel: str = "r",
+                                   n_classes: int = 3, precision: float = 1e-4,
+                                   pop_tile: int = 8, data_tile: int = 1024,
+                                   interpret: bool | None = None):
+    """Fused moments over pre-gathered predictions.
+
+    preds:  f32[P, D]   per-tree predictions (`uniq[DedupPlan.root]`
+                        materialized at the XLA level), P % pop_tile == 0,
+                        D % data_tile == 0
+    returns f32[P, M]   accumulated weighted moments — same contract,
+                        same (pop, data) grid, same j==0/j!=0 merge order
+                        as eval_fitness_pallas_postfix, so moments are
+                        BITWISE identical at the same tile geometry.
+
+    This is the dedup spill path: when the f32[U, Db] unique-subtree
+    scratch of `eval_fitness_pallas_from_subtrees` would not fit VMEM at
+    the plain kernel's tile pick, `ops._moments_padded` gathers in HBM
+    and streams (pop_tile, data_tile) blocks here instead of shrinking
+    the data tile — shrinking would change the merge order and break the
+    dedup-off/dedup-on bitwise contract.
+    """
+    P, D = preds.shape
+    assert P % pop_tile == 0 and D % data_tile == 0, (P, D, pop_tile, data_tile)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_moments = fit.get_kernel(kernel).n_moments
+
+    grid = (P // pop_tile, D // data_tile)
+    body = functools.partial(
+        _fitness_from_preds_kernel, kernel=kernel, n_classes=n_classes,
+        precision=precision)
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pop_tile, data_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((data_tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((pop_tile, n_moments), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, n_moments), jnp.float32),
+        interpret=interpret,
+    )(preds.astype(jnp.float32), y.astype(jnp.float32),
+      weight.astype(jnp.float32))
+
+
 def eval_fitness_pallas(op, arg, X, y, weight, const_table, *, max_depth: int,
                         kernel: str = "r", n_classes: int = 3, precision: float = 1e-4,
                         gather: str = "onehot", pop_tile: int = 8, data_tile: int = 1024,

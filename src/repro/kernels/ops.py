@@ -20,10 +20,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core import eval as _eval
 from repro.core.fitness import FitnessSpec
 from repro.core.trees import TreeSpec
 from repro.kernels import ref as _ref
-from repro.kernels.gp_eval import eval_fitness_pallas, eval_fitness_pallas_postfix
+from repro.kernels.gp_eval import (eval_fitness_pallas,
+                                   eval_fitness_pallas_from_preds,
+                                   eval_fitness_pallas_from_subtrees,
+                                   eval_fitness_pallas_postfix)
 
 _VMEM_BUDGET = 12 * 2**20  # bytes; leave headroom under ~16 MB/core
 
@@ -55,20 +59,27 @@ def pick_tiles(n_features: int, n_nodes: int, pop: int, data: int,
 
 def pick_tiles_postfix(n_features: int, stack_size: int, pop: int, data: int,
                        pop_tile: int = 8, data_tile: int = 1024,
-                       gather: str | None = None):
+                       gather: str | None = None, dedup_rows: int = 0):
     """Tile pick for the postfix stack kernel. The carried state is a
     [Pb, S, Db] stack (S = max_depth + 1), ~S/N of the tree kernel's
     node-resident buffers, so the data tile can grow under the same VMEM
     budget — fewer, larger grid blocks amortize the per-instruction loop.
     Gather defaults to "vmem": the stack kernel reads ONE terminal row
-    per instruction, where a dynamic take beats a one-hot matmul."""
+    per instruction, where a dynamic take beats a one-hot matmul.
+
+    `dedup_rows` (the dedup unique-table cap) charges the budget for the
+    f32[U, Db] unique-subtree scratch the in-VMEM dedup gather kernel
+    keeps resident per block. `_moments_padded` never lets this change
+    the picked tile — the dedup-off pick (``dedup_rows=0``) anchors the
+    merge order for the bitwise contract; the charged pick is the VMEM
+    re-check that decides whether the in-VMEM gather kernel is safe or
+    the gather must spill to HBM (`eval_fitness_pallas_from_preds`)."""
     if gather is None:
         gather = "vmem"
     Db = data_tile
 
     def vmem(Db):
-        # X tile + stack + the handful of [Pb, Db] per-instruction temps
-        return 4 * (n_features * Db + pop_tile * (stack_size + 8) * Db)
+        return _postfix_vmem(n_features, stack_size, pop_tile, Db, dedup_rows)
 
     while Db * 2 <= data and vmem(Db * 2) <= _VMEM_BUDGET and Db < 2048:
         Db *= 2
@@ -77,17 +88,48 @@ def pick_tiles_postfix(n_features: int, stack_size: int, pop: int, data: int,
     return pop_tile, Db, gather
 
 
+def _postfix_vmem(n_features: int, stack_size: int, pop_tile: int, Db: int,
+                  dedup_rows: int = 0) -> int:
+    """VMEM bytes per block of the postfix stack kernel: X tile + stack
+    + the handful of [Pb, Db] per-instruction temps + the dedup
+    unique-subtree scratch when that kernel is live."""
+    return 4 * (n_features * Db + pop_tile * (stack_size + 8) * Db
+                + dedup_rows * Db)
+
+
 def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
                     fit_spec: FitnessSpec, weight, data_tile: int, pop_tile: int,
-                    gather: str | None, interpret: bool | None):
+                    gather: str | None, interpret: bool | None,
+                    dedup: str = "off", dedup_cap: int = 0):
     """Pad to tile multiples and run the fused kernel: f32[P, M] moments.
     Padded data points carry weight 0.0, so every moment they touch is an
-    exact 0.0 and the grid accumulation stays padding-invariant."""
+    exact 0.0 and the grid accumulation stays padding-invariant.
+
+    Any ``dedup != "off"`` engages the exact-tier subexpression dedup
+    for postfix genomes: build the population's unique-subtree schedule
+    (core/eval.build_dedup_plan), evaluate each distinct subtree once,
+    and run a gather+moments kernel over the f32[cap, D] unique table.
+    The tile geometry is ALWAYS the plain (dedup_rows=0) pick — the
+    (pop, data) grid and merge order the dedup-off kernel uses — so
+    moments stay bitwise identical to dedup-off. When the uniq scratch
+    fits VMEM at that pick (re-checked by charging `dedup_rows=cap` to
+    the same budget model) the in-VMEM gather kernel runs; otherwise the
+    gather happens at the XLA level (HBM `uniq[root]`) and the spill
+    kernel streams plain-geometry blocks. Unique-table overflow
+    `lax.cond`s back onto the plain kernel."""
     P, N = op.shape
     F, D = X.shape
     if tree_spec.genome == "postfix":
+        cap = (_eval.resolve_dedup_cap(dedup_cap, P, N)
+               if dedup != "off" else 0)
         pop_tile, data_tile, gather = pick_tiles_postfix(
             F, tree_spec.stack_size, P, D, pop_tile, data_tile, gather)
+        # Would the f32[cap, Db] unique table still fit VMEM at this
+        # exact pick?  If not, spill the gather to HBM instead of
+        # shrinking the tile (which would change the merge order).
+        dedup_fits = (cap == 0 or _postfix_vmem(
+            F, tree_spec.stack_size, pop_tile, data_tile,
+            dedup_rows=cap) <= _VMEM_BUDGET)
     else:
         pop_tile, data_tile, gather = pick_tiles(F, N, P, D, pop_tile,
                                                  data_tile, gather)
@@ -114,13 +156,38 @@ def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
         lens = (op != 0).sum(-1).astype(jnp.int32)
         order = jnp.argsort(lens)
         op_s, arg_s = op[order], arg[order]
-        out = eval_fitness_pallas_postfix(
-            op_s, arg_s, lens[order], X, y, weight, const_table,
-            stack_size=tree_spec.stack_size, kernel=fit_spec.kernel,
-            n_classes=fit_spec.n_classes, precision=fit_spec.precision,
-            gather=gather, pop_tile=pop_tile, data_tile=data_tile,
-            interpret=interpret, fn_codes=fn_codes)
-        return out[jnp.argsort(order)][:P]
+
+        def _plain():
+            out = eval_fitness_pallas_postfix(
+                op_s, arg_s, lens[order], X, y, weight, const_table,
+                stack_size=tree_spec.stack_size, kernel=fit_spec.kernel,
+                n_classes=fit_spec.n_classes, precision=fit_spec.precision,
+                gather=gather, pop_tile=pop_tile, data_tile=data_tile,
+                interpret=interpret, fn_codes=fn_codes)
+            return out[jnp.argsort(order)]
+
+        if dedup != "off":
+            plan = _eval.build_dedup_plan(op, arg, tree_spec, cap)
+
+            def _dedup():
+                uniq = _eval.evaluate_unique_subtrees(plan, X, const_table,
+                                                      tree_spec)
+                if dedup_fits:
+                    return eval_fitness_pallas_from_subtrees(
+                        plan.root, uniq, y, weight, kernel=fit_spec.kernel,
+                        n_classes=fit_spec.n_classes,
+                        precision=fit_spec.precision, pop_tile=pop_tile,
+                        data_tile=data_tile, interpret=interpret)
+                preds = jnp.take(uniq, jnp.clip(plan.root, 0, cap - 1),
+                                 axis=0)
+                return eval_fitness_pallas_from_preds(
+                    preds, y, weight, kernel=fit_spec.kernel,
+                    n_classes=fit_spec.n_classes,
+                    precision=fit_spec.precision, pop_tile=pop_tile,
+                    data_tile=data_tile, interpret=interpret)
+
+            return jax.lax.cond(plan.overflow, _plain, _dedup)[:P]
+        return _plain()[:P]
     out = eval_fitness_pallas(
         op, arg, X, y, weight, const_table, max_depth=tree_spec.max_depth,
         kernel=fit_spec.kernel, n_classes=fit_spec.n_classes,
@@ -130,10 +197,11 @@ def _moments_padded(op, arg, X, y, const_table, tree_spec: TreeSpec,
 
 
 @partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
-                                   "gather", "interpret"))
+                                   "gather", "interpret", "dedup", "dedup_cap"))
 def moments(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
             *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
-            gather: str | None = None, interpret: bool | None = None):
+            gather: str | None = None, interpret: bool | None = None,
+            dedup: str = "off", dedup_cap: int = 0):
     """f32[P, M] phase-1 moments of every tree against (X:[F,D], y:[D]),
     fused with evaluation on the Pallas path. Sum with the other shards'
     moments (e.g. `lax.psum` on the mesh data axis), then finalize with
@@ -144,15 +212,18 @@ def moments(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSp
         raise ValueError(f"fitness kernel {fit_spec.kernel!r} defines no moment "
                          f"pass; it cannot accumulate across data tiles/shards")
     return _moments_padded(op, arg, X, y, const_table, tree_spec, fit_spec,
-                           weight, data_tile, pop_tile, gather, interpret)
+                           weight, data_tile, pop_tile, gather, interpret,
+                           dedup=dedup, dedup_cap=dedup_cap)
 
 
 @partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
-                                   "gather", "impl", "interpret"))
+                                   "gather", "impl", "interpret", "dedup",
+                                   "dedup_cap"))
 def stream_moments(acc, op, arg, X, y, const_table, tree_spec: TreeSpec,
                    fit_spec: FitnessSpec, *, weight=None, data_tile: int = 1024,
                    pop_tile: int = 8, gather: str | None = None,
-                   impl: str = "pallas", interpret: bool | None = None):
+                   impl: str = "pallas", interpret: bool | None = None,
+                   dedup: str = "off", dedup_cap: int = 0):
     """One streaming fold step, ONE dispatch: phase-1 moments of this
     data chunk merged into the running f32[P, M] accumulator `acc` via
     the kernel's merge (elementwise sum, or `combine_moments`). Seed the
@@ -168,19 +239,23 @@ def stream_moments(acc, op, arg, X, y, const_table, tree_spec: TreeSpec,
                          f"pass; it cannot accumulate across data chunks")
     if impl == "jnp":
         m = _ref.moments_ref_tiled(op, arg, X, y, const_table, tree_spec,
-                                   fit_spec, weight=weight)
+                                   fit_spec, weight=weight, dedup=dedup,
+                                   dedup_cap=dedup_cap)
     else:
         m = _moments_padded(op, arg, X, y, const_table, tree_spec, fit_spec,
-                            weight, data_tile, pop_tile, gather, interpret)
+                            weight, data_tile, pop_tile, gather, interpret,
+                            dedup=dedup, dedup_cap=dedup_cap)
     return kern.merge_moments(acc, m, fit_spec)
 
 
 @partial(jax.jit, static_argnames=("tree_spec", "fit_spec", "data_tile", "pop_tile",
-                                   "gather", "impl", "interpret"))
+                                   "gather", "impl", "interpret", "dedup",
+                                   "dedup_cap"))
 def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
             *, weight=None, data_tile: int = 1024, pop_tile: int = 8,
             gather: str | None = None, impl: str = "pallas",
-            interpret: bool | None = None):
+            interpret: bool | None = None,
+            dedup: str = "off", dedup_cap: int = 0):
     """f32[P] fitness (minimize) of every tree against (X:[F,D], y:[D]).
 
     `weight` is an optional f32[D] mask (0.0 on dataset-padding points,
@@ -195,7 +270,8 @@ def fitness(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSp
     kern = get_kernel(fit_spec.kernel)
     if impl == "jnp" or kern.moments is None:
         return _ref.fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
-                                weight=weight)
+                                weight=weight, dedup=dedup, dedup_cap=dedup_cap)
     m = _moments_padded(op, arg, X, y, const_table, tree_spec, fit_spec,
-                        weight, data_tile, pop_tile, gather, interpret)
+                        weight, data_tile, pop_tile, gather, interpret,
+                        dedup=dedup, dedup_cap=dedup_cap)
     return kern.reduce_moments(m, fit_spec)

@@ -5,41 +5,55 @@ weighting semantics) but built from the reference evaluator — the HBM-
 streaming path the kernel is measured against. Both the finalized
 fitness and the phase-1 moment pass (`moments_ref*`, what the mesh step
 psums across the data axis) are exposed.
+
+Every entry point takes `dedup`/`dedup_cap`: any value other than
+``"off"`` engages the exact-tier population-wide subexpression dedup
+(core/eval.make_postfix_evaluator) for postfix genomes — each distinct
+subtree evaluated once per call, predictions (and therefore moments and
+fitness) BITWISE identical to dedup-off. Non-postfix genomes ignore the
+flag. The dedup plan is built once per call and shared by every data
+tile of the tiled paths.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.eval import evaluate_population
+from repro.core.eval import make_postfix_evaluator
 from repro.core.fitness import FitnessSpec
 from repro.core.trees import TreeSpec
 
 
 def fitness_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
-                weight=None):
+                weight=None, dedup: str = "off", dedup_cap: int = 0):
     """f32[P] fitness (minimize); weight masks out padded data points.
     The reduction itself is the registered FitnessKernel's — this function
     only supplies the reference evaluator's predictions."""
-    preds = evaluate_population(op, arg, X, const_table, tree_spec)  # [P, D]
+    ev = make_postfix_evaluator(op, arg, const_table, tree_spec,
+                                dedup=dedup, dedup_cap=dedup_cap)
+    preds = ev(X)  # [P, D]
     from repro.core.fitness import fitness_from_preds
 
     return fitness_from_preds(preds, y, fit_spec, weight=weight)
 
 
 def moments_ref(op, arg, X, y, const_table, tree_spec: TreeSpec, fit_spec: FitnessSpec,
-                weight=None):
+                weight=None, dedup: str = "off", dedup_cap: int = 0,
+                _evaluator=None):
     """Phase 1 of the two-pass protocol on the reference evaluator:
     f32[P, M] weighted moment partials of the population against
     (X:[F,D], y:[D]). Partials from different data tiles/shards sum
     element-wise; `FitnessKernel.reduce_moments` finalizes."""
-    preds = evaluate_population(op, arg, X, const_table, tree_spec)  # [P, D]
+    ev = _evaluator if _evaluator is not None else make_postfix_evaluator(
+        op, arg, const_table, tree_spec, dedup=dedup, dedup_cap=dedup_cap)
+    preds = ev(X)  # [P, D]
     from repro.core.fitness import moments_from_preds
 
     return moments_from_preds(preds, y, fit_spec, weight=weight)
 
 
 def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
-                      fit_spec: FitnessSpec, weight=None, tile: int = 65536):
+                      fit_spec: FitnessSpec, weight=None, tile: int = 65536,
+                      dedup: str = "off", dedup_cap: int = 0):
     """`moments_ref`, scanning the data dimension in tiles so the
     [pop, nodes, data] evaluation buffer never exceeds one tile — the jnp
     analogue of the Pallas kernel's VMEM tiling. Tile partials merge via
@@ -49,16 +63,19 @@ def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
     caller-supplied `weight` (dataset padding mask, weight 0 on padded
     points) composes with the internal tile-padding mask; moments of
     zero-weight points are exact zeros, so tiling never changes the
-    result."""
+    result. The dedup plan (when engaged) is built once, outside the
+    tile scan — it depends only on the genomes, not the data."""
     import jax
 
     from repro.core.fitness import get_kernel
 
     kern = get_kernel(fit_spec.kernel)
+    ev = make_postfix_evaluator(op, arg, const_table, tree_spec,
+                                dedup=dedup, dedup_cap=dedup_cap)
     D = X.shape[1]
     if D <= tile:
         return moments_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
-                           weight=weight)
+                           weight=weight, _evaluator=ev)
     pad = (-D) % tile
     w = jnp.ones((D,), jnp.float32) if weight is None else weight.astype(jnp.float32)
     if pad:
@@ -73,7 +90,7 @@ def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
     def body(acc, inp):
         Xt, yt, wt = inp
         part = moments_ref(op, arg, Xt, yt, const_table, tree_spec,
-                           fit_spec, weight=wt)
+                           fit_spec, weight=wt, _evaluator=ev)
         return kern.merge_moments(acc, part, fit_spec), None
 
     out, _ = jax.lax.scan(
@@ -82,7 +99,8 @@ def moments_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
 
 
 def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
-                      fit_spec: FitnessSpec, weight=None, tile: int = 65536):
+                      fit_spec: FitnessSpec, weight=None, tile: int = 65536,
+                      dedup: str = "off", dedup_cap: int = 0):
     """Same contract as `fitness_ref`, tiled over data: accumulate the
     kernel's moment partials per tile, then finalize once — so EVERY
     registered kernel tiles, including two-pass objectives (pearson, r2)
@@ -94,7 +112,8 @@ def fitness_ref_tiled(op, arg, X, y, const_table, tree_spec: TreeSpec,
     kern = get_kernel(fit_spec.kernel)
     if X.shape[1] <= tile or kern.moments is None:
         return fitness_ref(op, arg, X, y, const_table, tree_spec, fit_spec,
-                           weight=weight)
+                           weight=weight, dedup=dedup, dedup_cap=dedup_cap)
     m = moments_ref_tiled(op, arg, X, y, const_table, tree_spec, fit_spec,
-                          weight=weight, tile=tile)
+                          weight=weight, tile=tile, dedup=dedup,
+                          dedup_cap=dedup_cap)
     return kern.reduce_moments(m, fit_spec)

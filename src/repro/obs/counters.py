@@ -27,17 +27,33 @@ Columns (index into the trailing axis; see docs/observability.md):
                    against the full dataset, excluding cache-served
                    rows and frozen steps (multiply by the real row
                    count for the paper's trees·rows metric)
+    SUBTREE_EVALS_SAVED
+                   subtree evaluations the exact-tier dedup avoided
+                   this generation: total active subtree spans across
+                   the PRE-step population minus the distinct count
+                   (0 when dedup is off, the genome is not postfix, or
+                   the plan overflowed its cap and fell back)
+    UNIQUE_SUBTREES
+                   distinct subexpressions in the PRE-step population
+                   (0 when dedup is off or the genome is not postfix;
+                   still the true distinct count when the plan
+                   overflowed, which is how a too-small cap shows up
+                   in telemetry) — saved / (saved + unique) is the
+                   generation's duplicate rate
 
 Mesh notes: the sharded step bodies carry the elite cache through
 untouched (it is host/single-device machinery), so CACHE_* columns are
-0 on a mesh; every other column is computed from replicated quantities
-and is identical on all shards.
+0 on a mesh; the dedup columns are likewise 0 on a mesh and in the
+tenant batch (re-running the signature sort per shard/slot purely for
+telemetry would double the plan cost); every other column is computed
+from replicated quantities and is identical on all shards.
 """
 from __future__ import annotations
 
 COUNTERS = ("cache_hits", "cache_queries", "frozen", "migrations",
-            "tree_evals")
-CACHE_HITS, CACHE_QUERIES, FROZEN, MIGRATIONS, TREE_EVALS = range(5)
+            "tree_evals", "subtree_evals_saved", "unique_subtrees")
+(CACHE_HITS, CACHE_QUERIES, FROZEN, MIGRATIONS, TREE_EVALS,
+ SUBTREE_EVALS_SAVED, UNIQUE_SUBTREES) = range(7)
 N_COUNTERS = len(COUNTERS)
 
 

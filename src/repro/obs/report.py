@@ -73,6 +73,13 @@ def summarize_metrics(records: list[dict]) -> str:
         if q:
             parts.append(f"cache hit rate: {c.get('cache_hits', 0) / q:.3f} "
                          f"({c.get('cache_hits', 0)}/{q})")
+        saved = c.get("subtree_evals_saved", 0)
+        uniq = c.get("unique_subtrees", 0)
+        if saved or uniq:
+            rate = saved / (saved + uniq) if saved + uniq else 0.0
+            parts.append(f"subtree evals saved by dedup: {saved} "
+                         f"(unique subtrees: {uniq}, duplicate rate: "
+                         f"{rate:.3f})")
     kinds = defaultdict(int)
     for rec in records:
         kinds[rec.get("kind", "?")] += 1

@@ -62,7 +62,10 @@ class GPService:
     eviction (and checkpoint/restart) quantum. `checkpoint_dir` arms
     restart-from-checkpoint; `checkpoint_every` counts blocks.
     `fault_hook(block_index)` is the failure-injection point the tests
-    use — it runs at the top of every scheduler step and may raise."""
+    use — it runs at the top of every scheduler step and may raise.
+    `dedup`/`dedup_cap` compile the tenant block with exact-tier
+    subexpression dedup (bitwise-identical fitness; see
+    docs/genomes.md)."""
 
     def __init__(self, *, slots: int = 8, pop_size: int = 64,
                  tree_spec: TreeSpec | None = None, max_depth: int = 5,
@@ -72,7 +75,8 @@ class GPService:
                  strategy: str = "fifo", checkpoint_dir: str | None = None,
                  checkpoint_every: int = 1, checkpoint_keep: int = 4,
                  heartbeat_deadline_s: float = 10.0, fault_hook=None,
-                 tracer=None, metrics=None):
+                 tracer=None, metrics=None, dedup: str = "off",
+                 dedup_cap: int = 0):
         if slots < 1:
             raise ValueError("slots must be >= 1")
         self.tree_spec = (tree_spec if tree_spec is not None
@@ -87,8 +91,11 @@ class GPService:
         self.strategy = strategy
         self.batch = JobBatch(slots, self.tree_spec.n_features, data_cap,
                               self.kernels, tourn_draw)
+        self.dedup = dedup
+        self.dedup_cap = dedup_cap
         self._block = jax.jit(engine.build_tenant_block(
-            self.tree_spec, self.kernels, tourn_draw, elitism, block_size),
+            self.tree_spec, self.kernels, tourn_draw, elitism, block_size,
+            dedup=dedup, dedup_cap=dedup_cap),
             donate_argnums=(0,))
         self._state = engine.empty_tenant_state(slots, pop_size, self.tree_spec,
                                                 elitism=elitism)

@@ -49,7 +49,7 @@ def test_block_bitwise_identical_to_stepwise():
                                       err_msg=f"GPState.{name} diverged")
     assert hist.shape == (K,)
     assert float(hist[-1]) == float(s_step.best_fitness)
-    assert counters.shape == (K, 5)  # telemetry stream rides the same scan
+    assert counters.shape == (K, 7)  # telemetry stream rides the same scan
 
 
 def test_block_early_stop_freezes_on_device():

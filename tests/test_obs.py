@@ -272,10 +272,12 @@ def test_block_monitor_routes_all_timing():
 
 
 def test_counter_helpers():
-    rows = np.array([[1, 1, 0, 0, 16], [0, 1, 1, 3, 15]], np.int32)
+    rows = np.array([[1, 1, 0, 0, 16, 40, 8], [0, 1, 1, 3, 15, 20, 9]],
+                    np.int32)
     tot = counters.totals(rows)
     assert tot == {"cache_hits": 1, "cache_queries": 2, "frozen": 1,
-                   "migrations": 3, "tree_evals": 31}
+                   "migrations": 3, "tree_evals": 31,
+                   "subtree_evals_saved": 60, "unique_subtrees": 17}
     assert counters.hit_rate(tot) == pytest.approx(0.5)
     assert counters.hit_rate({"cache_hits": 0, "cache_queries": 0}) == 0.0
 
